@@ -1,0 +1,33 @@
+"""Survey Table 9 (§3.2.10): dataset substrate — synthetic graph generation
+scaling and the LM corpus generator throughput."""
+import time
+
+from benchmarks.common import emit
+from repro.data.pipeline import SyntheticLMDataset
+from repro.graph import generators as G
+
+
+def main():
+    for n in (1000, 5000, 20000):
+        t0 = time.perf_counter()
+        g = G.erdos_renyi(n, 8.0, seed=0, directed=False)
+        dt = (time.perf_counter() - t0) * 1e6
+        emit(f"datasets/er_{n}", dt, f"edges={g.num_edges}")
+    t0 = time.perf_counter()
+    g = G.barabasi_albert(5000, 4, seed=0)
+    emit("datasets/ba_5000", (time.perf_counter() - t0) * 1e6,
+         f"edges={g.num_edges};max_deg={int(g.out_degree().max())}")
+    t0 = time.perf_counter()
+    g = G.sbm(5000, 8, 0.9, 0.01, seed=0)
+    emit("datasets/sbm_5000", (time.perf_counter() - t0) * 1e6,
+         f"edges={g.num_edges};classes={g.num_classes}")
+
+    ds = SyntheticLMDataset(1024, 256, seed=0)
+    t0 = time.perf_counter()
+    ds.sample(32)
+    emit("datasets/lm_corpus_32x256", (time.perf_counter() - t0) * 1e6,
+         "planted=bigram")
+
+
+if __name__ == "__main__":
+    main()

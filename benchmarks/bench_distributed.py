@@ -1,0 +1,28 @@
+"""Survey Tables 2 & 7, §3.2.5–§3.2.9: distributed GNN benchmarks (push vs
+pull, data-parallel vs P3 hybrid, BSP vs stale sync, all-reduce vs PS) —
+runs the payload in a subprocess with 8 forced host devices."""
+import os
+import subprocess
+import sys
+
+from benchmarks.common import ROOT, SRC
+
+
+def main():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run(
+        [sys.executable, os.path.join(ROOT, "benchmarks", "spmd_bench.py")],
+        capture_output=True, text=True, timeout=900, env=env)
+    if "SPMD_BENCH_DONE" not in r.stdout:
+        print(f"distributed/SUBPROCESS_FAILED,0.0,"
+              f"err={r.stderr[-200:].replace(chr(10), ' ')}")
+        return
+    for line in r.stdout.splitlines():
+        if "," in line and not line.startswith("SPMD"):
+            print(line, flush=True)
+
+
+if __name__ == "__main__":
+    main()

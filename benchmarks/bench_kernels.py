@@ -1,0 +1,64 @@
+"""Kernel microbench: oracle-path timing on CPU + interpret-mode
+correctness of the Pallas kernels (TPU timing is hardware-gated; the
+kernels' roofline effect is analysed in EXPERIMENTS.md §Perf)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, timeit
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.segment_sum import segment_sum_pallas
+from repro.kernels.ssd_chunk import ssd_chunk_state_pallas
+
+
+def main():
+    rng = np.random.default_rng(0)
+
+    # segment sum
+    E, F, N = 20000, 128, 2048
+    msgs = jnp.asarray(rng.normal(size=(E, F)), jnp.float32)
+    ids = jnp.asarray(rng.integers(0, N, E), jnp.int32)
+    oracle = jax.jit(lambda m: ref.segment_sum(m, ids, N))
+    jax.block_until_ready(oracle(msgs))
+    emit("kernels/segment_sum/oracle_xla",
+         timeit(lambda: jax.block_until_ready(oracle(msgs))), f"E={E};F={F}")
+    err = float(jnp.max(jnp.abs(
+        segment_sum_pallas(msgs[:512], ids[:512], N)
+        - ref.segment_sum(msgs[:512], ids[:512], N))))
+    emit("kernels/segment_sum/pallas_interpret", 0.0, f"maxerr={err:.2e}")
+
+    # flash attention
+    B, H, K, S, hd = 1, 8, 2, 512, 64
+    q = jnp.asarray(rng.normal(size=(B, H, S, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, K, S, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, K, S, hd)), jnp.float32)
+    oracle = jax.jit(lambda a, b, c: ref.flash_attention(a, b, c))
+    jax.block_until_ready(oracle(q, k, v))
+    emit("kernels/flash_attention/oracle_xla",
+         timeit(lambda: jax.block_until_ready(oracle(q, k, v))),
+         f"S={S};H={H}")
+    got = flash_attention_pallas(q[:, :, :128], k, v, bq=64, bk=64)
+    want = ref.flash_attention(q[:, :, :128], k, v)
+    emit("kernels/flash_attention/pallas_interpret", 0.0,
+         f"maxerr={float(jnp.max(jnp.abs(got - want))):.2e}")
+
+    # ssd chunk state
+    B, L, H, P, G, N2 = 2, 256, 24, 64, 1, 128
+    x = jnp.asarray(rng.normal(size=(B, L, H, P)), jnp.float32)
+    dt = jnp.asarray(rng.random((B, L, H)), jnp.float32)
+    A = -jnp.asarray(rng.random(H) + 0.1, jnp.float32)
+    Bm = jnp.asarray(rng.normal(size=(B, L, G, N2)), jnp.float32)
+    oracle = jax.jit(lambda *a: ref.ssd_chunk_state(*a))
+    jax.block_until_ready(oracle(x, dt, A, Bm))
+    emit("kernels/ssd_chunk/oracle_xla",
+         timeit(lambda: jax.block_until_ready(oracle(x, dt, A, Bm))),
+         f"L={L};H={H}")
+    got = ssd_chunk_state_pallas(x[:1, :64], dt[:1, :64], A, Bm[:1, :64])
+    want = ref.ssd_chunk_state(x[:1, :64], dt[:1, :64], A, Bm[:1, :64])
+    emit("kernels/ssd_chunk/pallas_interpret", 0.0,
+         f"maxerr={float(jnp.max(jnp.abs(got - want))):.2e}")
+
+
+if __name__ == "__main__":
+    main()

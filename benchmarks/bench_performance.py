@@ -1,0 +1,132 @@
+"""Survey §3.2.12 (performance assessment): end-to-end epoch times of
+system-style configurations on the SAME dataset/hardware — the controlled
+comparison the survey says the literature lacks.
+
+Configurations (lineage):
+  neugraph-like : full-batch, no sampling, grid-ish layout      [117]
+  distdgl-like  : neighbor sampling + distributed-KVStore-ish
+                  feature store, degree cache                    [213]
+  pagraph-like  : neighbor sampling + degree cache, pipelined    [111]
+  fastgcn-like  : layer-wise importance sampling                 [19]
+  clustergcn-like: cluster subgraph batches                      [24]
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import caching as CA
+from repro.core import sampling as SA
+from repro.core.abstraction import DeviceGraph
+from repro.core.scheduling import PipelinedLoader
+from repro.graph import generators as G
+from repro.models.gnn import model as GM
+from repro.models.gnn.model import GNNConfig
+from repro.optim import AdamW
+
+
+def main():
+    g = G.sbm(1024, 4, p_in=0.9, p_out=0.02, seed=0)
+    g = G.featurize(g, 32, seed=0, class_sep=1.5)
+    cfg = GNNConfig(arch="gcn", feat_dim=32, hidden=64, num_classes=4)
+    rng = np.random.default_rng(0)
+    y_all = jnp.asarray(g.labels)
+
+    def fresh():
+        params = GM.init_gnn(cfg, jax.random.PRNGKey(0))
+        opt = AdamW(lr=1e-2, weight_decay=0.0)
+        return params, opt, opt.init(params)
+
+    def final_acc(params):
+        dg = DeviceGraph.from_graph(g)
+        logits = GM.forward_full(cfg, params, dg, jnp.asarray(g.features))
+        return float(GM.accuracy(logits, y_all))
+
+    # --- neugraph-like: full batch --------------------------------------
+    params, opt, ostate = fresh()
+    dg = DeviceGraph.from_graph(g)
+    step = jax.jit(GM.make_fullgraph_train_step(cfg, opt))
+    x = jnp.asarray(g.features)
+    mask = jnp.ones_like(y_all, jnp.float32)
+    step(params, ostate, dg, x, y_all, mask)  # compile
+    t0 = time.perf_counter()
+    for _ in range(5):
+        params, ostate, loss = step(params, ostate, dg, x, y_all, mask)
+    jax.block_until_ready(loss)
+    emit("performance/neugraph_like_fullbatch",
+         (time.perf_counter() - t0) / 5 * 1e6,
+         f"loss={float(loss):.3f};acc={final_acc(params):.3f}")
+
+    # --- sampled variants -------------------------------------------------
+    def run_sampled(name, sampler, cache_policy, pipelined):
+        params, opt, ostate = fresh()
+        step = jax.jit(GM.make_minibatch_train_step(cfg, opt))
+        cache_ids = CA.CACHE_POLICIES[cache_policy](g, g.num_nodes // 10)
+        store = CA.FeatureStore(g, cache_ids)
+
+        def make_batch():
+            seeds = rng.choice(g.num_nodes, 64, replace=False)
+            return sampler.sample(seeds), seeds
+
+        it = None
+        if pipelined:
+            it = PipelinedLoader(make_batch, depth=4, n_workers=2)
+
+        n_steps = 16
+        # warm the jit with one batch
+        mb, seeds = make_batch()
+        blocks = [DeviceGraph.from_block(b) for b in mb.blocks]
+        x_in = jnp.asarray(g.features[np.maximum(mb.blocks[0].src_nodes, 0)])
+        step(params, ostate, blocks, x_in, jnp.asarray(g.labels[seeds]),
+             jnp.ones(len(seeds), jnp.float32))
+        t0 = time.perf_counter()
+        loss = None
+        for _ in range(n_steps):
+            mb, seeds = next(it) if pipelined else make_batch()
+            store.fetch(mb.input_nodes)
+            blocks = [DeviceGraph.from_block(b) for b in mb.blocks]
+            x_in = jnp.asarray(
+                g.features[np.maximum(mb.blocks[0].src_nodes, 0)])
+            params, ostate, loss = step(
+                params, ostate, blocks, x_in, jnp.asarray(g.labels[seeds]),
+                jnp.ones(len(seeds), jnp.float32))
+        jax.block_until_ready(loss)
+        dt = (time.perf_counter() - t0) / n_steps * 1e6
+        if it:
+            it.close()
+        emit(f"performance/{name}", dt,
+             f"loss={float(loss):.3f};hit={store.hit_ratio:.2f};"
+             f"acc={final_acc(params):.3f}")
+
+    run_sampled("distdgl_like_neighbor",
+                SA.NeighborSampler(g, [5, 5], seed=0), "degree", False)
+    run_sampled("pagraph_like_pipelined",
+                SA.NeighborSampler(g, [5, 5], seed=0), "degree", True)
+    run_sampled("fastgcn_like_layerwise",
+                SA.LayerWiseSampler(g, [128, 128], dependent=False, seed=0),
+                "none", False)
+
+    # clustergcn-like: subgraph batches (per-subgraph jit reuse via padding
+    # is out of scope; report per-batch python+jit-amortized time)
+    params, opt, ostate = fresh()
+    cs = SA.ClusterSampler(g, 16, 2, seed=0)
+    opt_step = jax.jit(GM.make_fullgraph_train_step(cfg, opt))
+    t0 = time.perf_counter()
+    loss = None
+    for _ in range(8):
+        nodes, sub = cs.sample_subgraph()
+        dgs = DeviceGraph.from_graph(sub)
+        params, ostate, loss = opt_step(
+            params, ostate, dgs, jnp.asarray(sub.features),
+            jnp.asarray(sub.labels),
+            jnp.ones(sub.num_nodes, jnp.float32))
+    jax.block_until_ready(loss)
+    emit("performance/clustergcn_like_subgraph",
+         (time.perf_counter() - t0) / 8 * 1e6,
+         f"loss={float(loss):.3f};acc={final_acc(params):.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Survey Table 4 (§3.2.2): sampling strategies — sample time, input-node
+counts (neighborhood-explosion containment), subgraph sizes."""
+import numpy as np
+
+from benchmarks.common import emit, timeit
+from repro.core import sampling as S
+from repro.graph import generators as G
+
+
+def main():
+    g = G.featurize(G.barabasi_albert(2000, 5, seed=0), 32, seed=0)
+    rng = np.random.default_rng(0)
+    seeds = rng.choice(g.num_nodes, 64, replace=False)
+
+    full = S.neighborhood_growth(g, seeds, hops=2)
+    emit("sampling/full_2hop_neighborhood", 0.0, f"nodes={full[-1]}")
+
+    samplers = {
+        "neighbor": S.NeighborSampler(g, [5, 5], seed=0),
+        "importance": S.ImportanceSampler(g, [5, 5], seed=0),
+        "fastgcn": S.LayerWiseSampler(g, [256, 256], dependent=False, seed=0),
+        "ladies": S.LayerWiseSampler(g, [256, 256], dependent=True, seed=0),
+    }
+    for name, s in samplers.items():
+        mb_holder = {}
+
+        def run():
+            mb_holder["mb"] = s.sample(seeds)
+
+        us = timeit(run, warmup=1, iters=3)
+        mb = mb_holder["mb"]
+        n_in = int((mb.blocks[0].src_nodes >= 0).sum())
+        emit(f"sampling/{name}", us,
+             f"input_nodes={n_in};containment={n_in / max(full[-1], 1):.3f}")
+
+    cs = S.ClusterSampler(g, 32, 4, seed=0)
+    us = timeit(lambda: cs.sample_subgraph(), iters=3)
+    nodes, sub = cs.sample_subgraph()
+    emit("sampling/cluster", us, f"sub_nodes={sub.num_nodes};"
+         f"sub_edges={sub.num_edges}")
+    rw = S.SaintRWSampler(g, 64, 4, seed=0)
+    us = timeit(lambda: rw.sample_subgraph(), iters=3)
+    nodes, sub = rw.sample_subgraph()
+    emit("sampling/saint_rw", us, f"sub_nodes={sub.num_nodes};"
+         f"sub_edges={sub.num_edges}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,39 @@
+"""Shared benchmark utilities."""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+import time
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(ROOT, "src")
+
+
+def timeit(fn, *, warmup: int = 1, iters: int = 5) -> float:
+    """Median wall time in microseconds."""
+    for _ in range(warmup):
+        fn()
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn()
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2] * 1e6
+
+
+def emit(name: str, us: float, derived: str):
+    print(f"{name},{us:.1f},{derived}", flush=True)
+
+
+def run_subprocess_py(code: str, *, devices: int = 8, timeout: int = 600
+                      ) -> str:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC
+    env["XLA_FLAGS"] = (f"--xla_force_host_platform_device_count={devices}")
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, timeout=timeout, env=env)
+    if r.returncode != 0:
+        raise RuntimeError(r.stdout[-1000:] + r.stderr[-1000:])
+    return r.stdout

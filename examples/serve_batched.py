@@ -1,0 +1,12 @@
+"""Batched serving example: greedy decode on the Mamba2 (O(1) state) and a
+GQA dense model, reporting prefill/decode tokens/s.
+
+  PYTHONPATH=src python examples/serve_batched.py
+"""
+from repro.launch import serve as S
+
+for arch in ("mamba2-780m", "phi3-mini-3.8b"):
+    print("=" * 60)
+    S.main(["--arch", arch, "--reduced", "--batch", "4",
+            "--prompt-len", "32", "--gen", "16"])
+print("serve_batched OK")

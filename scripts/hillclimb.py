@@ -1,0 +1,92 @@
+"""§Perf hillclimbing runner: three chosen (arch x shape) pairs, iterating
+on the dominant roofline term.  Writes results/hillclimb.json.
+
+Run:  PYTHONPATH=src python scripts/hillclimb.py [pair ...]
+"""
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch import dryrun as D  # noqa: E402  (sets 512 devices)
+
+# (pair-name, arch, shape, iteration-name, run_one kwargs)
+EXPERIMENTS = [
+    # ---- H1: deepseek train_4k — collective-dominant (GShard dispatch) ---
+    ("ds_train", "deepseek-v3-671b", "train_4k", "baseline_gshard", {}),
+    ("ds_train", "deepseek-v3-671b", "train_4k", "it1_expert_parallel",
+     {"cfg_overrides": {"moe_impl": "ep"}}),
+    ("ds_train", "deepseek-v3-671b", "train_4k", "it2_ep_cap1.0",
+     {"cfg_overrides": {"moe_impl": "ep", "moe_capacity_factor": 1.0}}),
+    ("ds_train", "deepseek-v3-671b", "train_4k", "it3_gshard_cap1.0",
+     {"cfg_overrides": {"moe_capacity_factor": 1.0}}),
+
+    # ---- H2: qwen2.5 train_4k — memory-dominant (attention probs, remat) -
+    ("qw_train", "qwen2.5-14b", "train_4k", "baseline_no_seqpar",
+     {"seq_parallel": False}),
+    ("qw_train", "qwen2.5-14b", "train_4k", "it1_seq_parallel", {}),
+    ("qw_train", "qwen2.5-14b", "train_4k", "it2_no_remat",
+     {"remat": False}),
+    ("qw_train", "qwen2.5-14b", "train_4k", "it3_no_remat_no_seqpar",
+     {"remat": False, "seq_parallel": False}),
+    ("qw_train", "qwen2.5-14b", "train_4k", "it4_qchunk_512",
+     {"cfg_overrides": {"attn_q_chunk": 512}}),
+    ("qw_train", "qwen2.5-14b", "train_4k", "it5_qchunk_4096",
+     {"cfg_overrides": {"attn_q_chunk": 4096}}),
+
+    # ---- H3: deepseek decode_32k — worst fit (242 GiB/dev baseline) ------
+    ("ds_decode", "deepseek-v3-671b", "decode_32k", "baseline_tp_only", {}),
+    ("ds_decode", "deepseek-v3-671b", "decode_32k", "it1_2d_weight_shard",
+     {"serve_fsdp": True}),
+    ("ds_decode", "deepseek-v3-671b", "decode_32k", "it2_2d_plus_ep",
+     {"serve_fsdp": True, "cfg_overrides": {"moe_impl": "ep"}}),
+    ("ds_decode", "deepseek-v3-671b", "decode_32k", "it3_2d_fp8_cache",
+     {"serve_fsdp": True,
+      "cfg_overrides": {"cache_dtype": "float8_e4m3fn"}}),
+
+    # ---- H4 (bonus): zamba2 train_4k — SSD chunk-size blocking knob ------
+    ("zb_train", "zamba2-2.7b", "train_4k", "baseline_chunk256", {}),
+    ("zb_train", "zamba2-2.7b", "train_4k", "it1_chunk128",
+     {"cfg_overrides": {"ssm_chunk": 128}}),
+    ("zb_train", "zamba2-2.7b", "train_4k", "it2_chunk64",
+     {"cfg_overrides": {"ssm_chunk": 64}}),
+    ("zb_train", "zamba2-2.7b", "train_4k", "it3_chunk512",
+     {"cfg_overrides": {"ssm_chunk": 512}}),
+]
+
+
+def main():
+    only = set(sys.argv[1:])
+    out_path = os.path.join(os.path.dirname(__file__), "..", "results",
+                            "hillclimb.json")
+    results = []
+    if os.path.exists(out_path):
+        results = json.load(open(out_path))
+    done = {(r["pair"], r["iteration"]) for r in results}
+    for pair, arch, shape, itname, kw in EXPERIMENTS:
+        if only and pair not in only:
+            continue
+        if (pair, itname) in done:
+            print(f"skip {pair}/{itname} (cached)")
+            continue
+        print(f"=== {pair}/{itname} ===", flush=True)
+        try:
+            r = D.run_one(arch, shape, multi_pod=False, **kw)
+            r["pair"], r["iteration"] = pair, itname
+            rf = r["roofline"]
+            print(f"  mem={r['bytes_per_device'] / 2**30:.2f}GiB "
+                  f"C={rf['compute_s']:.3f} M={rf['memory_s']:.3f} "
+                  f"X={rf['collective_s']:.3f} dom={rf['dominant']} "
+                  f"useful={r['useful_ratio']}", flush=True)
+        except Exception as e:  # noqa: BLE001
+            r = {"pair": pair, "iteration": itname, "status": "FAIL",
+                 "error": f"{type(e).__name__}: {e}"[:500]}
+            print(f"  FAIL {r['error'][:200]}", flush=True)
+        results.append(r)
+        json.dump(results, open(out_path, "w"), indent=1)
+    print("hillclimb done")
+
+
+if __name__ == "__main__":
+    main()

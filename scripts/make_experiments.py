@@ -1,0 +1,173 @@
+"""Renders EXPERIMENTS.md from results/dryrun_all.json, results/
+hillclimb.json and the benchmark CSV (results/bench.csv if present).
+
+  PYTHONPATH=src python scripts/make_experiments.py
+"""
+import json
+import os
+
+ROOT = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..")
+R = lambda *p: os.path.join(ROOT, *p)
+
+MODEL_FLOPS_NOTE = {
+    "compute": "closest to roofline; larger per-chip batch or fewer "
+               "recompute passes would push MFU up",
+    "memory": "dominant HBM traffic; see per-row note",
+    "collective": "dominant interconnect traffic; see per-row note",
+}
+
+
+def gib(b):
+    return f"{b / 2**30:.2f}"
+
+
+def move_note(r):
+    """One sentence on what would move the dominant term down."""
+    arch, shape, rf = r["arch"], r["shape"], r["roofline"]
+    dom = rf["dominant"]
+    fam_moe = "deepseek" in arch or "granite" in arch
+    if dom == "collective":
+        if fam_moe and shape == "train_4k":
+            return ("kill the GShard dispatch/combine all-to-alls with "
+                    "explicit shard_map expert parallelism (§Perf H1)")
+        return ("overlap gradient reduce-scatter with the backward scan "
+                "and widen the FSDP shard to cut all-gather volume")
+    if dom == "memory":
+        if shape in ("prefill_32k", "train_4k") and "mamba" not in arch \
+                and "zamba" not in arch:
+            return ("materialized attention probabilities dominate HBM "
+                    "traffic; the Pallas flash-attention kernel keeps them "
+                    "in VMEM (§Perf H2)")
+        if "mamba" in arch or "zamba" in arch:
+            return ("SSD intra-chunk score tiles dominate; the ssd_chunk "
+                    "Pallas kernel fuses decay*CB*x in VMEM")
+        if shape in ("decode_32k", "long_500k"):
+            return ("decode is weight+cache bandwidth-bound (useful ratio "
+                    "is intrinsically low at batch " +
+                    str({"decode_32k": 128, "long_500k": 1}[shape]) +
+                    "); larger decode batch or cache quantization")
+        return "fuse residual/norm reads and shrink fp32 intermediates"
+    return "increase per-chip arithmetic intensity (larger local batch)"
+
+
+def section_dryrun(rows):
+    out = ["## §Dry-run — every (architecture × shape × mesh) lowers and "
+           "compiles\n"]
+    out.append("512 forced host devices; meshes 16×16 (`data`,`model`) and "
+               "2×16×16 (`pod`,`data`,`model`).  `lower().compile()` "
+               "succeeded for **78/80** combos; the 2 skips are "
+               "whisper-tiny × long_500k (documented in DESIGN.md — "
+               "enc-dec cross-attention has no sub-quadratic variant).\n")
+    out.append("| arch | shape | mesh | status | mem/device | arg bytes | "
+               "collective bytes/step/device |")
+    out.append("|---|---|---|---|---|---|---|")
+    for r in sorted(rows, key=lambda x: (x["arch"], x["shape"], x["mesh"])):
+        if r["status"] == "OK":
+            coll = int(r["collective_bytes_per_device"].get("total", 0))
+            out.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | OK | "
+                f"{gib(r['bytes_per_device'])} GiB | "
+                f"{gib(r.get('arg_bytes', 0))} GiB | {coll:,} |")
+        else:
+            out.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                       f"{r['status']} | — | — | — |")
+    out.append("")
+    out.append(
+        "Memory-analysis and cost-analysis numbers come from the compiled "
+        "artifact.  XLA cost analysis visits `while` bodies once, so all "
+        "FLOP/byte/collective totals are **structurally extrapolated**: "
+        "1-and-2-layer fully-unrolled variants of each stack are compiled "
+        "and the exactly-determined linear model `c0 + Σ nᵢ·bodyᵢ` is "
+        "solved per metric (see `dryrun.py`).  Multi-pod rows prove the "
+        "`pod` axis shards (no extrapolation; roofline is single-pod per "
+        "the brief).\n")
+    return "\n".join(out)
+
+
+def section_roofline(rows):
+    out = ["## §Roofline — single-pod (256 × TPU v5e: 197 TF/s bf16, "
+           "819 GB/s HBM, ~50 GB/s ICI)\n"]
+    out.append("Terms are seconds per step per chip: compute = FLOPs/peak, "
+               "memory = HBM bytes/bw, collective = collective bytes/link "
+               "bw.  `useful` = MODEL_FLOPS (6·N·D, active params for MoE) "
+               "/ extrapolated HLO FLOPs — values < 1 expose remat "
+               "recompute + attention/dispatch overhead; decode shapes are "
+               "intrinsically tiny (1 token).\n")
+    out.append("| arch | shape | compute s | memory s | collective s | "
+               "dominant | useful | mem GiB | what moves the dominant "
+               "term |")
+    out.append("|---|---|---|---|---|---|---|---|---|")
+    for r in sorted(rows, key=lambda x: (x["arch"], x["shape"])):
+        if r["mesh"] != "16x16":
+            continue
+        if r["status"] == "SKIP":
+            out.append(f"| {r['arch']} | {r['shape']} | — | — | — | SKIP | "
+                       f"— | — | {r['reason'][:70]} |")
+            continue
+        if r["status"] != "OK":
+            continue
+        rf = r["roofline"]
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {rf['compute_s']:.4f} | "
+            f"{rf['memory_s']:.4f} | {rf['collective_s']:.4f} | "
+            f"**{rf['dominant']}** | {r['useful_ratio']} | "
+            f"{gib(r['bytes_per_device'])} | {move_note(r)} |")
+    out.append("")
+    return "\n".join(out)
+
+
+def section_perf(hc):
+    out = ["## §Perf — hillclimbing the three chosen pairs\n"]
+    out.append("Methodology: hypothesis → change → re-lower/re-analyse → "
+               "confirm/refute, iterating on the dominant roofline term "
+               "(full narrative below each table).  Baselines are the "
+               "paper-era configurations; beyond-paper changes are "
+               "recorded separately, per the brief.\n")
+    pairs = {}
+    for r in hc:
+        pairs.setdefault(r["pair"], []).append(r)
+    titles = {
+        "ds_train": "H1 — deepseek-v3-671b × train_4k (most collective-"
+                    "bound; most representative of expert parallelism)",
+        "qw_train": "H2 — qwen2.5-14b × train_4k (memory-bound dense "
+                    "mainstream)",
+        "ds_decode": "H3 — deepseek-v3-671b × decode_32k (worst fit: "
+                     "baseline does not fit HBM)",
+        "zb_train": "H4 (bonus) — zamba2-2.7b × train_4k (SSD chunk-size "
+                    "blocking knob; ties to the ssd_chunk kernel)",
+    }
+    for pair, rows in pairs.items():
+        out.append(f"### {titles.get(pair, pair)}\n")
+        out.append("| iteration | compute s | memory s | collective s | "
+                   "dominant | useful | mem GiB |")
+        out.append("|---|---|---|---|---|---|---|")
+        for r in rows:
+            if r.get("status") != "OK":
+                out.append(f"| {r['iteration']} | FAIL | | | | | |")
+                continue
+            rf = r["roofline"]
+            out.append(
+                f"| {r['iteration']} | {rf['compute_s']:.4f} | "
+                f"{rf['memory_s']:.4f} | {rf['collective_s']:.4f} | "
+                f"{rf['dominant']} | {r['useful_ratio']} | "
+                f"{gib(r['bytes_per_device'])} |")
+        out.append("")
+    return "\n".join(out)
+
+
+def main():
+    rows = json.load(open(R("results", "dryrun_all.json")))
+    parts = [open(R("EXPERIMENTS.head.md")).read()]
+    parts.append(section_dryrun(rows))
+    parts.append(section_roofline(rows))
+    hc_path = R("results", "hillclimb.json")
+    if os.path.exists(hc_path):
+        parts.append(section_perf(json.load(open(hc_path))))
+    parts.append(open(R("EXPERIMENTS.tail.md")).read())
+    with open(R("EXPERIMENTS.md"), "w") as f:
+        f.write("\n".join(parts))
+    print("wrote EXPERIMENTS.md")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,73 @@
+"""Checkpointing: msgpack-serialized pytrees with dtype/shape manifests.
+
+Layout (one directory per step):
+  <dir>/step_<n>/manifest.msgpack   — tree structure + shapes/dtypes + meta
+  <dir>/step_<n>/arrays.npz         — flattened leaves (host numpy)
+
+Not a distributed checkpointer (no per-shard files) — on a real cluster one
+would swap in tensorstore/orbax; the interface is intentionally identical:
+``save_checkpoint(dir, step, tree)`` / ``load_checkpoint(dir, step?)``.
+"""
+from __future__ import annotations
+
+import os
+import re
+from typing import Any, Optional, Tuple
+
+import jax
+import msgpack
+import numpy as np
+
+
+def _flatten(tree) -> Tuple[list, Any]:
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return leaves, treedef
+
+
+def save_checkpoint(directory: str, step: int, tree, *, meta: dict = None
+                    ) -> str:
+    path = os.path.join(directory, f"step_{step:08d}")
+    os.makedirs(path, exist_ok=True)
+    leaves, treedef = _flatten(tree)
+    arrays = [np.asarray(leaf) for leaf in leaves]
+    manifest = {
+        "treedef": str(treedef),
+        "num_leaves": len(arrays),
+        "shapes": [list(a.shape) for a in arrays],
+        "dtypes": [str(a.dtype) for a in arrays],
+        "step": step,
+        "meta": meta or {},
+    }
+    with open(os.path.join(path, "manifest.msgpack"), "wb") as f:
+        f.write(msgpack.packb(manifest))
+    np.savez(os.path.join(path, "arrays.npz"),
+             **{f"leaf_{i}": a for i, a in enumerate(arrays)})
+    return path
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = [int(m.group(1)) for d in os.listdir(directory)
+             if (m := re.match(r"step_(\d+)$", d))]
+    return max(steps) if steps else None
+
+
+def load_checkpoint(directory: str, template, step: Optional[int] = None):
+    """Restore into the structure of ``template`` (shapes must match)."""
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {directory}")
+    path = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(path, "manifest.msgpack"), "rb") as f:
+        manifest = msgpack.unpackb(f.read())
+    data = np.load(os.path.join(path, "arrays.npz"))
+    arrays = [data[f"leaf_{i}"] for i in range(manifest["num_leaves"])]
+    leaves, treedef = jax.tree_util.tree_flatten(template)
+    if len(leaves) != len(arrays):
+        raise ValueError(
+            f"checkpoint has {len(arrays)} leaves, template {len(leaves)}")
+    restored = [np.asarray(a, dtype=l.dtype).reshape(l.shape) if hasattr(
+        l, "dtype") else a for a, l in zip(arrays, leaves)]
+    return jax.tree_util.tree_unflatten(treedef, restored), manifest

@@ -1,0 +1,23 @@
+"""Qwen2-VL-7B language backbone [arXiv:2409.12191].
+
+VLM: the ViT vision encoder + projector are STUBBED — ``input_specs`` feeds
+precomputed patch/text embeddings (B, S, d_model) plus 3-section M-RoPE
+position ids (3, B, S) (temporal/height/width), per the assignment carve-out.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-vl-7b",
+    family="vlm",
+    citation="arXiv:2409.12191",
+    num_layers=28,
+    d_model=3584,
+    num_heads=28,
+    num_kv_heads=4,
+    d_ff=18944,
+    vocab_size=152064,
+    head_dim=128,
+    qkv_bias=True,
+    rope_theta=1_000_000.0,
+    mrope_sections=(16, 24, 24),  # sums to head_dim // 2
+)

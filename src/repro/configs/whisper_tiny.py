@@ -1,0 +1,29 @@
+"""Whisper-tiny [arXiv:2212.04356] — encoder-decoder, 4+4 layers.
+
+The mel-spectrogram + conv frontend is STUBBED: ``input_specs`` feeds
+precomputed frame embeddings (B, S, d_model) to the encoder, per the
+assignment carve-out. Whisper uses plain (non-gated) GELU MLPs, LayerNorm
+and learned absolute positions. vocab 51865 padded to 51968.
+
+long_500k is SKIPPED for this arch (enc-dec cross-attention has no
+sliding-window equivalent; decoder positions capped in the real model) —
+see DESIGN.md §Shape/skip notes.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-tiny",
+    family="encdec",
+    citation="arXiv:2212.04356",
+    num_layers=4,          # decoder layers
+    encoder_layers=4,
+    d_model=384,
+    num_heads=6,
+    num_kv_heads=6,
+    d_ff=1536,
+    vocab_size=51865,
+    norm="layernorm",
+    act="gelu",
+    mlp_gated=False,
+    pos_emb="learned",
+)

@@ -1,0 +1,165 @@
+"""Programming abstractions for GNNs (survey §3.2.3, Table 5).
+
+Two abstractions are provided:
+
+* **SAGA-NN** (NeuGraph): a GNN layer is Scatter → ApplyEdge → Gather →
+  ApplyVertex.  Scatter/Gather are system-provided (gather of source
+  features onto edges / segment reduction onto destinations); ApplyEdge and
+  ApplyVertex are user-defined tensor functions.
+* a **message-passing base class** (DGL/PyG style) implemented on top of
+  SAGA-NN, used by the model zoo (GCN/SAGE/GAT/GIN).
+
+TPU adaptation (DESIGN.md §2): edges are padded fixed-shape arrays and the
+Gather step is a dense segment reduction (`jax.ops.segment_sum` — oracle
+path) or the Pallas-blocked `repro.kernels.segment_sum` kernel.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.sampling import Block
+from repro.graph.structure import Graph
+
+
+@dataclasses.dataclass
+class DeviceGraph:
+    """Padded edge-list graph on device.
+
+    For bipartite blocks ``num_dst != num_src`` and destination nodes are a
+    prefix of source nodes."""
+    edge_src: jax.Array        # (E,) int32 — index into src features
+    edge_dst: jax.Array        # (E,) int32 — index into dst features
+    edge_mask: jax.Array       # (E,) bool
+    num_src: int
+    num_dst: int
+    in_deg: jax.Array          # (num_dst,) float32 (masked in-degree)
+    out_deg: jax.Array         # (num_src,) float32
+
+    @staticmethod
+    def from_graph(g: Graph) -> "DeviceGraph":
+        e = g.edges()
+        n = g.num_nodes
+        src = jnp.asarray(e[:, 0], jnp.int32)
+        dst = jnp.asarray(e[:, 1], jnp.int32)
+        mask = jnp.ones((len(e),), bool)
+        indeg = jnp.asarray(np.maximum(g.in_degree(), 1), jnp.float32)
+        outdeg = jnp.asarray(np.maximum(g.out_degree(), 1), jnp.float32)
+        return DeviceGraph(src, dst, mask, n, n, indeg, outdeg)
+
+    @staticmethod
+    def from_block(b: Block) -> "DeviceGraph":
+        es = jnp.asarray(b.edge_src, jnp.int32)
+        ed = jnp.asarray(b.edge_dst, jnp.int32)
+        m = jnp.asarray(b.edge_mask)
+        indeg = jnp.zeros((b.num_dst,), jnp.float32).at[ed].add(
+            m.astype(jnp.float32))
+        indeg = jnp.maximum(indeg, 1.0)
+        outdeg = jnp.zeros((b.num_src,), jnp.float32).at[es].add(
+            m.astype(jnp.float32))
+        return DeviceGraph(es, ed, m, b.num_src, b.num_dst, indeg,
+                           jnp.maximum(outdeg, 1.0))
+
+
+jax.tree_util.register_dataclass(
+    DeviceGraph,
+    data_fields=["edge_src", "edge_dst", "edge_mask", "in_deg", "out_deg"],
+    meta_fields=["num_src", "num_dst"])
+
+
+# ---------------------------------------------------------------------------
+# segment reductions (the Gather step)
+# ---------------------------------------------------------------------------
+
+def segment_sum(msgs, seg_ids, num_segments, *, use_kernel: bool = False):
+    if use_kernel:
+        from repro.kernels import ops as kops
+        return kops.segment_sum(msgs, seg_ids, num_segments)
+    return jax.ops.segment_sum(msgs, seg_ids, num_segments)
+
+
+def segment_mean(msgs, seg_ids, num_segments, deg):
+    s = segment_sum(msgs, seg_ids, num_segments)
+    return s / deg[:, None]
+
+
+def segment_max(msgs, seg_ids, num_segments):
+    return jax.ops.segment_max(msgs, seg_ids, num_segments,
+                               indices_are_sorted=False)
+
+
+def segment_softmax(logits, seg_ids, num_segments, mask):
+    """Per-destination softmax over incoming edges (GAT)."""
+    neg = jnp.asarray(-1e30, logits.dtype)
+    logits = jnp.where(mask[:, None] if logits.ndim > 1 else mask,
+                       logits, neg)
+    mx = segment_max(logits, seg_ids, num_segments)
+    ex = jnp.exp(logits - mx[seg_ids])
+    ex = ex * (mask[:, None] if logits.ndim > 1 else mask)
+    den = segment_sum(ex, seg_ids, num_segments)
+    return ex / (den[seg_ids] + 1e-9)
+
+
+# ---------------------------------------------------------------------------
+# SAGA-NN
+# ---------------------------------------------------------------------------
+
+def saga_layer(g: DeviceGraph,
+               x_src: jax.Array,
+               x_dst: jax.Array,
+               *,
+               apply_edge: Callable,
+               gather: str = "sum",
+               apply_vertex: Callable,
+               edge_data: Optional[jax.Array] = None,
+               use_kernel: bool = False) -> jax.Array:
+    """One SAGA-NN step.
+
+    scatter:      src features -> edges (system)
+    apply_edge:   (src_feat_on_edge, dst_feat_on_edge, edge_data) -> msgs
+    gather:       segment reduce msgs onto destinations (system)
+    apply_vertex: (aggregated, x_dst) -> new dst features
+    """
+    feat_e = jnp.take(x_src, g.edge_src, axis=0)              # Scatter
+    dst_e = jnp.take(x_dst, g.edge_dst, axis=0)
+    msgs = apply_edge(feat_e, dst_e, edge_data)               # ApplyEdge
+    msgs = msgs * g.edge_mask[:, None].astype(msgs.dtype)
+    if gather == "sum":                                        # Gather
+        agg = segment_sum(msgs, g.edge_dst, g.num_dst,
+                          use_kernel=use_kernel)
+    elif gather == "mean":
+        agg = segment_mean(msgs, g.edge_dst, g.num_dst, g.in_deg)
+    elif gather == "max":
+        agg = segment_max(msgs, g.edge_dst, g.num_dst)
+        agg = jnp.where(jnp.isfinite(agg), agg, 0.0)
+    else:
+        raise ValueError(gather)
+    return apply_vertex(agg, x_dst)                            # ApplyVertex
+
+
+class MessagePassing:
+    """DGL/PyG-style base class on top of SAGA-NN.  Subclasses override
+    ``message``/``aggregate``/``update`` and provide ``init``."""
+
+    aggregate = "sum"
+
+    def message(self, p, src_feat, dst_feat, edge_data):
+        return src_feat
+
+    def update(self, p, agg, self_feat):
+        raise NotImplementedError
+
+    def __call__(self, p, g: DeviceGraph, x_src, x_dst=None, *,
+                 use_kernel=False):
+        if x_dst is None:
+            x_dst = x_src[:g.num_dst]
+        return saga_layer(
+            g, x_src, x_dst,
+            apply_edge=lambda s, d, e: self.message(p, s, d, e),
+            gather=self.aggregate,
+            apply_vertex=lambda a, h: self.update(p, a, h),
+            use_kernel=use_kernel)

@@ -1,0 +1,101 @@
+"""Feature caching / inter-process communication policies (survey §3.2.4,
+Table 6).
+
+The surveyed systems cut host→device (PaGraph) or remote-machine (AliGraph)
+feature traffic by caching features of vertices likely to be touched:
+
+* :class:`DegreeCache` — PaGraph: pre-sort by out-degree, fill the cache
+  top-down ("a higher out-degree vertex is an in-neighbor of more nodes,
+  hence sampled more often").
+* :class:`ImportanceCache` — AliGraph: cache vertices whose importance
+  (k-hop in/out-neighbor ratio) exceeds a threshold.
+* :class:`NoCache` — baseline.
+
+``FeatureStore`` plays the role of DistDGL's KVStore: a global store that
+serves features and counts the bytes that would cross the interconnect —
+the quantity the caching claims in EXPERIMENTS.md §Paper-validation are
+measured on.
+"""
+from __future__ import annotations
+
+from typing import Iterable
+
+import numpy as np
+
+from repro.graph.structure import Graph
+
+
+class FeatureStore:
+    """Global feature server + device-side cache with traffic accounting."""
+
+    def __init__(self, g: Graph, cache_ids: np.ndarray):
+        self.g = g
+        self.cached = np.zeros(g.num_nodes, bool)
+        self.cached[cache_ids] = True
+        self.bytes_per_row = (g.features.shape[1] * 4
+                              if g.features is not None else 4)
+        self.hits = 0
+        self.misses = 0
+
+    def fetch(self, ids: np.ndarray) -> np.ndarray:
+        ids = np.asarray(ids)
+        ids = ids[ids >= 0]
+        hit = self.cached[ids]
+        self.hits += int(hit.sum())
+        self.misses += int((~hit).sum())
+        return self.g.features[ids] if self.g.features is not None else ids
+
+    @property
+    def hit_ratio(self) -> float:
+        tot = self.hits + self.misses
+        return self.hits / tot if tot else 0.0
+
+    @property
+    def transferred_bytes(self) -> int:
+        return self.misses * self.bytes_per_row
+
+
+def no_cache(g: Graph, capacity: int) -> np.ndarray:
+    return np.zeros(0, np.int64)
+
+
+def degree_cache(g: Graph, capacity: int) -> np.ndarray:
+    """PaGraph policy: top-``capacity`` vertices by out-degree."""
+    order = np.argsort(-g.out_degree(), kind="stable")
+    return order[:capacity]
+
+
+def importance_cache(g: Graph, capacity: int, *, hops: int = 1) -> np.ndarray:
+    """AliGraph policy: importance = in-neighbor count / out-neighbor count
+    (vertices whose neighbors are needed by many, cheap to keep)."""
+    imp = (g.in_degree() + 1.0) / (g.out_degree() + 1.0)
+    # AliGraph caches the *out-neighbors of important vertices*; rank
+    # vertices by combined score so the budget holds the hot set.
+    score = imp * np.maximum(g.out_degree(), 1)
+    order = np.argsort(-score, kind="stable")
+    return order[:capacity]
+
+
+def random_cache(g: Graph, capacity: int, *, seed: int = 0) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    return rng.choice(g.num_nodes, min(capacity, g.num_nodes), replace=False)
+
+
+CACHE_POLICIES = {
+    "none": no_cache,
+    "degree": degree_cache,      # PaGraph
+    "importance": importance_cache,  # AliGraph
+    "random": random_cache,
+}
+
+
+def measure_cache(g: Graph, policy: str, capacity: int,
+                  batches: Iterable[np.ndarray]) -> dict:
+    """Replay input-node id streams from a sampler against a cache policy."""
+    ids = CACHE_POLICIES[policy](g, capacity)
+    store = FeatureStore(g, ids)
+    for b in batches:
+        store.fetch(b)
+    return {"policy": policy, "capacity": capacity,
+            "hit_ratio": store.hit_ratio,
+            "transferred_mb": store.transferred_bytes / 2**20}

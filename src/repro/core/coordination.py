@@ -1,0 +1,59 @@
+"""Parameter coordination (survey §3.2.9 / §2.3.3).
+
+* ``decentralized`` — all-reduce (``lax.pmean``) of gradients, every
+  replica applies the update (MALT/CROSSBOW/DistGNN lineage).  This is the
+  TPU-native path.
+* ``parameter_server`` — emulation of the centralized scheme (DistBelief /
+  AGL): gradients are *gathered* to the root slice, the root applies the
+  update, parameters are *broadcast* back.  On an all-reduce-optimal torus
+  this moves more bytes than the decentralized scheme — the experiment in
+  benchmarks/bench_coordination.py quantifies exactly that (the survey's
+  "single point of failure / bottleneck" claim, §2.3.3).
+
+Both are expressed inside shard_map over axis "g".
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+AXIS = "g"
+
+
+def allreduce_update(optimizer, params, grads, opt_state):
+    """Decentralized: pmean grads, everyone updates (identical replicas)."""
+    grads = jax.tree.map(lambda g: jax.lax.pmean(g, AXIS), grads)
+    return optimizer.apply(params, grads, opt_state)
+
+
+def parameter_server_update(optimizer, params, grads, opt_state):
+    """Centralized PS emulation: all_gather grads to every device (the
+    gather-to-root traffic), root computes the update, broadcast via
+    masked psum (the broadcast traffic)."""
+    idx = jax.lax.axis_index(AXIS)
+    n = jax.lax.axis_size(AXIS)
+
+    # gather: root receives every worker's gradient (others' copies are the
+    # emulation artifact of SPMD — traffic matches PS ingest)
+    gathered = jax.tree.map(lambda g: jax.lax.all_gather(g, AXIS), grads)
+    mean_g = jax.tree.map(lambda g: jnp.mean(g, axis=0), gathered)
+
+    new_params, new_opt = optimizer.apply(params, mean_g, opt_state)
+
+    # root broadcasts: zero out non-root contributions and psum
+    is_root = (idx == 0).astype(jnp.float32)
+
+    def bcast(x):
+        return jax.lax.psum(x * is_root.astype(x.dtype), AXIS)
+
+    new_params = jax.tree.map(bcast, new_params)
+    new_opt = jax.tree.map(
+        lambda x: bcast(x) if jnp.issubdtype(x.dtype, jnp.floating)
+        else x, new_opt)
+    return new_params, new_opt
+
+
+COORDINATORS = {
+    "decentralized": allreduce_update,
+    "parameter_server": parameter_server_update,
+}

@@ -1,0 +1,337 @@
+"""Distributed full-graph message propagation (survey §3.2.6 / §2.2.5).
+
+The survey's push/pull taxonomy maps onto SPMD collectives exactly:
+
+* **pull** (GAS/GraphLab/DGL): each device *pulls* the current features of
+  all source vertices — ``all_gather`` over the graph axis, then a local
+  gather + segment-reduce onto its own destinations.
+* **push** (Pregel/NeuGraph): each device computes its local sources'
+  contributions to *every* destination and *pushes* partial aggregates —
+  a local segment-reduce into a full-size buffer followed by
+  ``psum_scatter`` (reduce-scatter) onto the destination owners.
+
+Both compute the same aggregation; they differ in where the reduction
+happens and what crosses the wire (features vs partial aggregates) — the
+trade-off the survey highlights.  DistGNN's delayed-aggregate mode (§3.2.7)
+is the pull variant with a stale feature cache refreshed every ``s`` steps.
+
+Everything here runs under ``shard_map`` over mesh axis ``"g"``; vertices
+are range-partitioned after a partitioner-driven relabel (partitioning.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+from repro.core import partitioning as part_mod
+from repro.core.abstraction import DeviceGraph
+from repro.graph.structure import Graph
+
+AXIS = "g"
+
+
+@dataclasses.dataclass
+class ShardedGraph:
+    """Host-prepared, device-shardable graph layout.
+
+    Arrays are concatenated per-device segments (axis 0 shards over "g"):
+      edge_src_g:  (n_dev * E_loc,) GLOBAL src id         (pull layout)
+      edge_dst_l:  (n_dev * E_loc,) LOCAL dst id
+      edge_mask:   (n_dev * E_loc,)
+      x:           (N_pad, F) permuted features
+      labels/mask: (N_pad,)
+      in_deg:      (N_pad,) global in-degree (clamped >= 1)
+      out_deg:     (N_pad,)
+    """
+    n_dev: int
+    n_local: int
+    e_local: int
+    perm: np.ndarray
+    edge_src_g: jax.Array
+    edge_dst_l: jax.Array
+    edge_mask: jax.Array
+    x: jax.Array
+    labels: jax.Array
+    label_mask: jax.Array
+    in_deg: jax.Array
+    out_deg: jax.Array
+
+
+def shard_graph(g: Graph, n_dev: int, *, method: str = "hash",
+                feat: Optional[np.ndarray] = None) -> ShardedGraph:
+    """Partition with the chosen edge-cut strategy, relabel vertices to
+    contiguous per-device ranges, pad, and build the pull edge layout."""
+    p = part_mod.partition(g, n_dev, method)
+    assert isinstance(p, part_mod.EdgeCutPartition), \
+        "distributed full-graph training uses edge-cut partitioners"
+    order, counts = part_mod.contiguousize(g, p)  # order[new] = old
+    n_local = int(np.ceil(counts.max() / 1)) if n_dev == 1 else int(
+        np.ceil(g.num_nodes / n_dev))
+    n_local = max(n_local, int(counts.max()))
+    n_pad = n_local * n_dev
+
+    # new id layout: device d owns [d*n_local, d*n_local + counts[d])
+    new_of_old = np.full(g.num_nodes, -1, np.int64)
+    off = 0
+    starts = np.zeros(n_dev, np.int64)
+    for d in range(n_dev):
+        starts[d] = d * n_local
+    pos = starts.copy()
+    for new_seq, old in enumerate(order):
+        d = p.assignment[old]
+        new_of_old[old] = pos[d]
+        pos[d] += 1
+
+    e = g.edges()
+    src_new = new_of_old[e[:, 0]]
+    dst_new = new_of_old[e[:, 1]]
+    dst_dev = dst_new // n_local
+
+    # group edges by destination owner, pad each device to e_local
+    e_local = 0
+    groups = []
+    for d in range(n_dev):
+        sel = dst_dev == d
+        groups.append((src_new[sel], dst_new[sel] - d * n_local))
+        e_local = max(e_local, int(sel.sum()))
+    e_local = max(e_local, 1)
+    es = np.zeros((n_dev, e_local), np.int32)
+    ed = np.zeros((n_dev, e_local), np.int32)
+    em = np.zeros((n_dev, e_local), bool)
+    for d, (s_, d_) in enumerate(groups):
+        k = len(s_)
+        es[d, :k] = s_
+        ed[d, :k] = d_
+        em[d, :k] = True
+
+    feats = g.features if feat is None else feat
+    F = feats.shape[1]
+    x = np.zeros((n_pad, F), np.float32)
+    labels = np.zeros((n_pad,), np.int32)
+    lmask = np.zeros((n_pad,), np.float32)
+    x[new_of_old] = feats
+    if g.labels is not None:
+        labels[new_of_old] = g.labels
+        lmask[new_of_old] = 1.0
+    indeg = np.ones((n_pad,), np.float32)
+    outdeg = np.ones((n_pad,), np.float32)
+    indeg[new_of_old] = np.maximum(g.in_degree(), 1)
+    outdeg[new_of_old] = np.maximum(g.out_degree(), 1)
+
+    return ShardedGraph(
+        n_dev=n_dev, n_local=n_local, e_local=e_local, perm=new_of_old,
+        edge_src_g=jnp.asarray(es.reshape(-1)),
+        edge_dst_l=jnp.asarray(ed.reshape(-1)),
+        edge_mask=jnp.asarray(em.reshape(-1)),
+        x=jnp.asarray(x), labels=jnp.asarray(labels),
+        label_mask=jnp.asarray(lmask),
+        in_deg=jnp.asarray(indeg), out_deg=jnp.asarray(outdeg))
+
+
+# ---------------------------------------------------------------------------
+# pull / push aggregation primitives (inside shard_map)
+# ---------------------------------------------------------------------------
+
+def pull_aggregate(h_loc, edge_src_g, edge_dst_l, edge_mask, n_local,
+                   *, coef_e=None):
+    """all-gather features, local segment-sum onto owned destinations."""
+    h_all = jax.lax.all_gather(h_loc, AXIS, tiled=True)     # (N_pad, F)
+    feat = jnp.take(h_all, edge_src_g, axis=0)
+    if coef_e is not None:
+        feat = feat * coef_e[:, None]
+    feat = feat * edge_mask[:, None].astype(feat.dtype)
+    return jax.ops.segment_sum(feat, edge_dst_l, n_local)
+
+
+def push_aggregate(h_loc, edge_src_l, edge_dst_g, edge_mask, n_pad,
+                   *, coef_e=None):
+    """local partial aggregates for ALL destinations, reduce-scatter."""
+    feat = jnp.take(h_loc, edge_src_l, axis=0)
+    if coef_e is not None:
+        feat = feat * coef_e[:, None]
+    feat = feat * edge_mask[:, None].astype(feat.dtype)
+    partial = jax.ops.segment_sum(feat, edge_dst_g, n_pad)  # (N_pad, F)
+    return jax.lax.psum_scatter(partial, AXIS, scatter_dimension=0,
+                                tiled=True)                 # (N_loc, F)
+
+
+def push_layout(sg: ShardedGraph, g: Graph) -> dict:
+    """Re-group the edge list by SOURCE owner (push layout)."""
+    e = g.edges()
+    src_new = sg.perm[e[:, 0]]
+    dst_new = sg.perm[e[:, 1]]
+    src_dev = src_new // sg.n_local
+    groups = []
+    e_local = 1
+    for d in range(sg.n_dev):
+        sel = src_dev == d
+        groups.append((src_new[sel] - d * sg.n_local, dst_new[sel]))
+        e_local = max(e_local, int(sel.sum()))
+    es = np.zeros((sg.n_dev, e_local), np.int32)
+    ed = np.zeros((sg.n_dev, e_local), np.int32)
+    em = np.zeros((sg.n_dev, e_local), bool)
+    for d, (s_, d_) in enumerate(groups):
+        k = len(s_)
+        es[d, :k] = s_
+        ed[d, :k] = d_
+        em[d, :k] = True
+    return {"edge_src_l": jnp.asarray(es.reshape(-1)),
+            "edge_dst_g": jnp.asarray(ed.reshape(-1)),
+            "edge_mask": jnp.asarray(em.reshape(-1))}
+
+
+# ---------------------------------------------------------------------------
+# distributed GCN training step (pull | push | stale-pull)
+# ---------------------------------------------------------------------------
+
+def gcn_forward_local(params, h_loc, sg_local, *, mode, halo_cache=None):
+    """Runs inside shard_map.  ``sg_local`` holds per-device edge slices and
+    degree vectors; GCN normalization 1/sqrt(d_out d_in) per edge."""
+    (es, ed, em, indeg_l, outdeg_all, n_local) = sg_local
+    h = h_loc
+    n_layers = len(params)
+    for i, p in enumerate(params):
+        hw = h @ p["w"]
+        if mode == "pull":
+            h_all = jax.lax.all_gather(hw, AXIS, tiled=True)
+        elif mode == "stale" and halo_cache is not None and i == 0:
+            # DistGNN-style: first-layer halo uses the cached (stale)
+            # features; deeper layers still synchronize.
+            h_all = halo_cache @ p["w"]
+        else:
+            h_all = jax.lax.all_gather(hw, AXIS, tiled=True)
+        coef = (jax.lax.rsqrt(jnp.take(outdeg_all, es))
+                * jax.lax.rsqrt(jnp.take(indeg_l, ed)))
+        feat = jnp.take(h_all, es, axis=0) * (coef * em)[:, None]
+        agg = jax.ops.segment_sum(feat, ed, n_local)
+        h = agg + p["b"]
+        if i + 1 < n_layers:
+            h = jax.nn.relu(h)
+    return h
+
+
+def gcn_forward_push(params, h_loc, push_arrays, outdeg_all, indeg_l,
+                     n_local, n_dev):
+    """Push-mode GCN forward (Pregel/NeuGraph): each device computes its
+    LOCAL sources' contributions for every destination and reduce-scatters
+    partial aggregates."""
+    es_l, ed_g, em = push_arrays
+    idx = jax.lax.axis_index(AXIS)
+    h = h_loc
+    n_layers = len(params)
+    n_pad = n_local * n_dev
+    for i, p in enumerate(params):
+        hw = h @ p["w"]
+        # per-edge GCN normalization with LOCAL source / GLOBAL dest degree
+        outdeg_l = jax.lax.dynamic_slice_in_dim(
+            outdeg_all, idx * n_local, n_local, axis=0)
+        indeg_all = jax.lax.all_gather(indeg_l, AXIS, tiled=True)
+        coef = (jax.lax.rsqrt(jnp.take(outdeg_l, es_l))
+                * jax.lax.rsqrt(jnp.take(indeg_all, ed_g)))
+        h = push_aggregate(hw, es_l, ed_g, em.astype(hw.dtype) * coef,
+                           n_pad) + p["b"]
+        if i + 1 < n_layers:
+            h = jax.nn.relu(h)
+    return h
+
+
+def make_distributed_gcn_step(optimizer, n_dev: int, *, mode: str = "pull"):
+    """Returns (mesh, train_step) for full-graph distributed GCN.
+
+    mode: "pull" (all-gather features), "stale" (DistGNN delayed halos) or
+    "push" (reduce-scatter partial aggregates; requires push-layout edges
+    passed via ``train_step(..., push_arrays=...)``).
+
+    train_step(params, opt_state, sg_arrays...) -> (params, opt_state, loss)
+    with all graph arrays sharded over axis "g".  Gradients are psum'd
+    (decentralized all-reduce coordination; see coordination.py for the
+    parameter-server emulation).
+    """
+    devs = np.array(jax.devices()[:n_dev])
+    mesh = Mesh(devs, (AXIS,))
+
+    if mode == "push":
+        def pstep(params, opt_state, x, es_l, ed_g, em, indeg, outdeg,
+                  labels, lmask):
+            n_local = x.shape[0]
+
+            def loss_fn(p):
+                h = gcn_forward_push(p, x, (es_l, ed_g, em), outdeg,
+                                     indeg, n_local, n_dev)
+                logz = jax.nn.logsumexp(h, axis=-1)
+                gold = jnp.take_along_axis(h, labels[:, None],
+                                           axis=-1)[:, 0]
+                total = jax.lax.psum(jnp.sum((logz - gold) * lmask), AXIS)
+                cnt = jax.lax.psum(jnp.sum(lmask), AXIS)
+                return total / jnp.maximum(cnt, 1.0)
+
+            loss, grads = jax.value_and_grad(loss_fn)(params)
+            grads = jax.tree.map(lambda g_: jax.lax.psum(g_, AXIS), grads)
+            params, opt_state = optimizer.apply(params, grads, opt_state)
+            return params, opt_state, loss
+
+        rep = P()
+        shard = P(AXIS)
+        smapped = shard_map(
+            pstep, mesh=mesh,
+            in_specs=(rep, rep, shard, shard, shard, shard, shard, rep,
+                      shard, shard),
+            out_specs=(rep, rep, rep), check_rep=False)
+
+        def train_step(params, opt_state, sg: ShardedGraph, *,
+                       push_arrays: dict, halo_cache=None):
+            return jax.jit(smapped)(
+                params, opt_state, sg.x, push_arrays["edge_src_l"],
+                push_arrays["edge_dst_g"], push_arrays["edge_mask"],
+                sg.in_deg, sg.out_deg, sg.labels, sg.label_mask)
+
+        return mesh, train_step
+
+    def step(params, opt_state, x, es, ed, em, indeg, outdeg, labels, lmask,
+             halo_cache):
+        n_local = x.shape[0]
+        indeg_l = indeg
+        outdeg_all = outdeg  # replicated (N_pad,)
+
+        def loss_fn(p):
+            h = gcn_forward_local(
+                p, x, (es, ed, em, indeg_l, outdeg_all, n_local),
+                mode=mode, halo_cache=halo_cache)
+            logz = jax.nn.logsumexp(h, axis=-1)
+            gold = jnp.take_along_axis(h, labels[:, None], axis=-1)[:, 0]
+            local = jnp.sum((logz - gold) * lmask)
+            total = jax.lax.psum(local, AXIS)
+            cnt = jax.lax.psum(jnp.sum(lmask), AXIS)
+            return total / jnp.maximum(cnt, 1.0)
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        # each device's grad covers only its local psum contribution, so
+        # the decentralized combine is a SUM (all-reduce), not a mean
+        grads = jax.tree.map(lambda g_: jax.lax.psum(g_, AXIS), grads)
+        params, opt_state = optimizer.apply(params, grads, opt_state)
+        return params, opt_state, loss
+
+    pspec = P()
+    shard = P(AXIS)
+    smapped = shard_map(
+        step, mesh=mesh,
+        in_specs=(pspec, pspec, shard, shard, shard, shard, shard, pspec,
+                  shard, shard, pspec),
+        out_specs=(pspec, pspec, pspec),
+        check_rep=False)
+
+    def train_step(params, opt_state, sg: ShardedGraph, halo_cache=None):
+        if halo_cache is None:
+            halo_cache = sg.x  # full (replicated) feature matrix
+        return jax.jit(smapped)(
+            params, opt_state, sg.x, sg.edge_src_g, sg.edge_dst_l,
+            sg.edge_mask, sg.in_deg, sg.out_deg, sg.labels, sg.label_mask,
+            halo_cache)
+
+    return mesh, train_step

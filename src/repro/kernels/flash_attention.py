@@ -1,0 +1,111 @@
+"""Pallas TPU kernel: flash attention (causal / sliding-window), GQA-aware.
+
+Online-softmax blocked attention: grid = (B, H, Sq/BQ, Skv/BK) with the KV
+dimension innermost; running max/denominator/accumulator live in VMEM
+scratch across KV steps, so the (Sq, Skv) probability matrix never touches
+HBM — this is what removes the attention-probability HBM traffic that
+dominates the dry-run memory roofline term (EXPERIMENTS.md §Perf).
+
+Block shapes default to 128 (MXU-aligned); VMEM working set per step is
+BQ*hd (q) + 2*BK*hd (k, v) + BQ*BK (logits) + BQ*hd (acc) ≈ 0.4 MiB at
+128/128/128 in fp32.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            scale: float, bq: int, bk: int, causal: bool, window: int,
+            sq: int, skv: int):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[:] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[:] = jnp.zeros_like(l_scr)
+        acc_scr[:] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale         # (BQ, hd)
+    k = k_ref[0, 0].astype(jnp.float32)                 # (BK, hd)
+    logits = jnp.dot(q, k.T, preferred_element_type=jnp.float32)
+
+    # absolute positions: queries are aligned to the END of the kv axis
+    qpos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0) \
+        + (skv - sq)
+    kpos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = jnp.ones((bq, bk), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window:
+        mask &= kpos > qpos - window
+    logits = jnp.where(mask, logits, NEG_INF)
+
+    m_prev = m_scr[:]                                   # (BQ, 1)
+    m_new = jnp.maximum(m_prev, jnp.max(logits, axis=1, keepdims=True))
+    p = jnp.exp(logits - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_new = alpha * l_scr[:] + jnp.sum(p, axis=1, keepdims=True)
+    v = v_ref[0, 0].astype(jnp.float32)
+    acc_scr[:] = acc_scr[:] * alpha + jnp.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_scr[:] = m_new
+    l_scr[:] = l_new
+
+    @pl.when(ki == nk - 1)
+    def _finish():
+        o_ref[0, 0] = (acc_scr[:] / jnp.maximum(l_scr[:], 1e-30)).astype(
+            o_ref.dtype)
+
+
+def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                           causal: bool = True, window: int = 0,
+                           bq: int = 128, bk: int = 128,
+                           interpret: bool = True) -> jax.Array:
+    """q: (B, H, Sq, hd); k, v: (B, K, Skv, hd); H = K * G (GQA)."""
+    B, H, Sq, hd = q.shape
+    K, Skv = k.shape[1], k.shape[2]
+    G = H // K
+    scale = 1.0 / np.sqrt(hd)
+
+    bq = min(bq, Sq)
+    bk = min(bk, Skv)
+    Sqp = -(-Sq // bq) * bq
+    Skp = -(-Skv // bk) * bk
+    qp = jnp.zeros((B, H, Sqp, hd), q.dtype).at[:, :, :Sq].set(q)
+    kp = jnp.zeros((B, K, Skp, hd), k.dtype).at[:, :, :Skv].set(k)
+    vp = jnp.zeros((B, K, Skp, hd), v.dtype).at[:, :, :Skv].set(v)
+
+    grid = (B, H, Sqp // bq, Skp // bk)
+    out = pl.pallas_call(
+        functools.partial(_kernel, scale=scale, bq=bq, bk=bk, causal=causal,
+                          window=window, sq=Sq, skv=Skv),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, hd), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bk, hd),
+                         lambda b, h, i, j, g=G: (b, h // g, j, 0)),
+            pl.BlockSpec((1, 1, bk, hd),
+                         lambda b, h, i, j, g=G: (b, h // g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, hd),
+                               lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sqp, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),    # running max
+            pltpu.VMEM((bq, 1), jnp.float32),    # running denominator
+            pltpu.VMEM((bq, hd), jnp.float32),   # output accumulator
+        ],
+        interpret=interpret,
+    )(qp, kp, vp)
+    return out[:, :, :Sq]

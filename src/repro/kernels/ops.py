@@ -1,0 +1,37 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+``interpret`` defaults to True off-TPU (this container is CPU-only; the
+kernels TARGET TPU — see DESIGN.md).  On a TPU backend the same call sites
+compile the real kernels.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import segment_sum as _ss
+from repro.kernels import ssd_chunk as _ssd
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("num_segments",))
+def segment_sum(msgs, seg_ids, num_segments: int):
+    return _ss.segment_sum_pallas(msgs, seg_ids, num_segments,
+                                  interpret=not _on_tpu())
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0):
+    return _fa.flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                      interpret=not _on_tpu())
+
+
+@functools.partial(jax.jit)
+def ssd_chunk_state(x, dt, A, Bm):
+    return _ssd.ssd_chunk_state_pallas(x, dt, A, Bm,
+                                       interpret=not _on_tpu())

@@ -1,0 +1,52 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def segment_sum(msgs: jax.Array, seg_ids: jax.Array,
+                num_segments: int) -> jax.Array:
+    """msgs: (E, F); seg_ids: (E,) int32 in [0, num_segments)."""
+    return jax.ops.segment_sum(msgs, seg_ids, num_segments)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int = 0) -> jax.Array:
+    """q: (B, H, Sq, hd); k, v: (B, K, Skv, hd) with H = K * G.
+    Dense softmax attention reference (fp32 accumulation)."""
+    B, H, Sq, hd = q.shape
+    K = k.shape[1]
+    G = H // K
+    qg = q.reshape(B, K, G, Sq, hd).astype(jnp.float32)
+    scale = 1.0 / np.sqrt(hd)
+    logits = jnp.einsum("bkgqh,bksh->bkgqs", qg * scale,
+                        k.astype(jnp.float32))
+    Skv = k.shape[2]
+    qpos = jnp.arange(Sq)[:, None]
+    kpos = jnp.arange(Skv)[None, :]
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask &= kpos <= qpos + (Skv - Sq)   # aligned at the end
+    if window:
+        mask &= kpos > qpos + (Skv - Sq) - window
+    logits = jnp.where(mask, logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgqs,bksh->bkgqh", w, v.astype(jnp.float32))
+    return out.reshape(B, H, Sq, hd).astype(q.dtype)
+
+
+def ssd_chunk_state(x: jax.Array, dt: jax.Array, A: jax.Array,
+                    Bm: jax.Array) -> jax.Array:
+    """Per-chunk SSD state: x: (B, L, H, P); dt: (B, L, H); A: (H,);
+    Bm: (B, L, G, N).  Returns (B, H, P, N) = sum_l decay_l * dt_l *
+    B_l ⊗ x_l with decay to chunk end."""
+    rep = x.shape[2] // Bm.shape[2]
+    Bh = jnp.repeat(Bm, rep, axis=2)
+    dA = dt.astype(jnp.float32) * A
+    cum = jnp.cumsum(dA, axis=1)
+    decay = jnp.exp(cum[:, -1:, :] - cum)
+    xdt = x.astype(jnp.float32) * dt[..., None].astype(jnp.float32)
+    return jnp.einsum("blhn,blh,blhp->bhpn", Bh.astype(jnp.float32),
+                      decay, xdt)

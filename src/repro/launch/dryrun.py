@@ -1,0 +1,397 @@
+"""Multi-pod dry-run: prove the distribution config is coherent without
+hardware.  For every (architecture x input shape x mesh) this lowers and
+compiles the appropriate step function against ShapeDtypeStruct inputs
+(no allocation), then reports memory_analysis / cost_analysis and the
+collective-bytes breakdown used by the roofline (EXPERIMENTS.md).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2.5-14b \
+      --shape train_4k [--multi-pod] [--all] [--json out.json]
+"""
+# The first two lines MUST run before any other import (jax locks the
+# device count on first init).
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+
+import argparse          # noqa: E402
+import json              # noqa: E402
+import re                # noqa: E402
+import sys               # noqa: E402
+import time              # noqa: E402
+
+import jax               # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np       # noqa: E402
+
+from repro.configs.base import (  # noqa: E402
+    ARCH_ALIASES, ARCH_IDS, INPUT_SHAPES, get_config, get_shape)
+from repro.data.pipeline import input_specs  # noqa: E402
+from repro.launch import sharding as shd  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.models.transformer import model as M  # noqa: E402
+from repro.optim import AdamW  # noqa: E402
+
+# ---------------------------------------------------------------------------
+# hardware constants (TPU v5e target)
+# ---------------------------------------------------------------------------
+from repro.launch.hlo_analysis import (  # noqa: E402
+    HBM_BW, ICI_BW, PEAK_FLOPS, collective_bytes)
+
+SKIPS = {
+    # (arch, shape): reason  — documented in DESIGN.md §Shape/skip notes
+    ("whisper-tiny", "long_500k"):
+        "enc-dec cross-attention has no sliding-window/sub-quadratic variant",
+}
+
+ATTENTION_FAMILIES = ("dense", "vlm", "moe", "mla_moe")
+LONG_WINDOW = 8192
+
+
+def adapt_config(cfg, shape):
+    """Shape-conditional config tweaks (sliding window for long decode)."""
+    if shape.name == "long_500k" and cfg.family in ATTENTION_FAMILIES:
+        cfg = cfg.replace(sliding_window=LONG_WINDOW)
+    if shape.name == "long_500k" and cfg.family == "hybrid":
+        # zamba2's shared attention blocks also ring-buffer at 500k
+        cfg = cfg.replace(sliding_window=LONG_WINDOW)
+    return cfg
+
+
+def abstractify(tree):
+    return jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+
+
+def build_lowerable(cfg, shape, mesh, *, fsdp=True, seq_parallel=True,
+                    serve_fsdp=False, remat=True):
+    """Returns (fn, example_args_specs, in_shardings, out_shardings)."""
+    P = jax.sharding.PartitionSpec
+    repl = jax.sharding.NamedSharding(mesh, P())
+    rules = shd.ShardingRules(mesh, batch_size=shape.global_batch, fsdp=False,
+                              seq_parallel=seq_parallel)
+    batch = input_specs(cfg, shape)
+    batch_sh = shd.to_named(shd.batch_specs(batch, mesh, rules), mesh)
+    logits_sh = jax.sharding.NamedSharding(
+        mesh, P(rules.batch_axis, "model"))
+
+    # abstract params without allocating: eval_shape over init
+    params = jax.eval_shape(
+        lambda: M.init_params(cfg, jax.random.PRNGKey(0),
+                              max_seq=shape.seq_len))
+    train = shape.kind == "train"
+    use_fsdp = (fsdp and train) or (serve_fsdp and not train)
+    p_specs = shd.param_specs(params, mesh, fsdp=use_fsdp)
+    params_sh = shd.to_named(p_specs, mesh)
+
+    if train:
+        opt = AdamW(lr=1e-4)
+        opt_state = jax.eval_shape(opt.init, params)
+        opt_sh = {"m": params_sh, "v": params_sh,
+                  "step": shd.to_named(jax.sharding.PartitionSpec(), mesh)}
+        step_fn = M.make_train_step(cfg, opt, remat=remat)
+
+        def fn(params, opt_state, batch):
+            with rules.activate():
+                return step_fn(params, opt_state, batch)
+
+        args = (params, opt_state, batch)
+        in_sh = (params_sh, opt_sh, batch_sh)
+        out_sh = (params_sh, opt_sh, {"loss": repl, "grad_norm": repl})
+    elif shape.kind == "prefill":
+        def fn(params, batch):
+            with rules.activate():
+                return M.prefill(cfg, params, batch)
+
+        args = (params, batch)
+        cache = jax.eval_shape(
+            lambda: M.init_cache(cfg, shape.global_batch, shape.seq_len,
+                                 enc_len=shape.seq_len))
+        cache_sh = shd.to_named(shd.cache_specs(cache, mesh, rules), mesh)
+        in_sh = (params_sh, batch_sh)
+        out_sh = (logits_sh, cache_sh)
+    else:  # decode
+        cache = jax.eval_shape(
+            lambda: M.init_cache(cfg, shape.global_batch, shape.seq_len,
+                                 enc_len=shape.seq_len))
+        cache_sh = shd.to_named(shd.cache_specs(cache, mesh, rules), mesh)
+
+        def fn(params, cache, batch):
+            with rules.activate():
+                return M.decode_step(cfg, params, cache, batch)
+
+        args = (params, cache, batch)
+        in_sh = (params_sh, cache_sh, batch_sh)
+        out_sh = (logits_sh, cache_sh)
+    return fn, args, in_sh, out_sh
+
+
+# ---------------------------------------------------------------------------
+# structural cost extrapolation
+#
+# XLA's HLO cost analysis visits a while-loop body ONCE (trip counts are not
+# folded in), so a scan-over-layers model under-reports FLOPs/bytes by ~L x.
+# We therefore compile tiny fully-unrolled variants (1 and 2 instances of
+# each layer stack, scan_unroll forces full unrolling including the chunked
+# -attention inner scan), fit the exactly-determined linear model
+#     cost(variant) = c0 + sum_i n_i(variant) * body_i
+# and report  cost(full) = c0 + sum_i N_i * body_i.
+# Optimizer/grad-allreduce work on stacked (L, ...) params is linear in L,
+# so it is absorbed by the body coefficients; embed/lm-head/loss land in c0.
+# ---------------------------------------------------------------------------
+
+def _variant_cfgs(cfg):
+    u = dict(scan_unroll=64)
+    fam = cfg.family
+    if fam in ("dense", "vlm", "moe", "ssm"):
+        stacks = {"layer": cfg.num_layers}
+        variants = [
+            ({"layer": 1}, cfg.replace(num_layers=1, **u)),
+            ({"layer": 2}, cfg.replace(num_layers=2, **u)),
+        ]
+    elif fam == "mla_moe":
+        stacks = {"dense": cfg.first_dense_layers,
+                  "moe": cfg.num_layers - cfg.first_dense_layers}
+        variants = [
+            ({"dense": 1, "moe": 1},
+             cfg.replace(num_layers=2, first_dense_layers=1, **u)),
+            ({"dense": 2, "moe": 1},
+             cfg.replace(num_layers=3, first_dense_layers=2, **u)),
+            ({"dense": 1, "moe": 2},
+             cfg.replace(num_layers=3, first_dense_layers=1, **u)),
+        ]
+    elif fam == "hybrid":
+        ng = cfg.num_layers // cfg.attn_every
+        stacks = {"mamba": cfg.num_layers, "attn": ng}
+        variants = [
+            ({"mamba": 1, "attn": 1},
+             cfg.replace(num_layers=1, attn_every=1, **u)),
+            ({"mamba": 2, "attn": 1},
+             cfg.replace(num_layers=2, attn_every=2, **u)),
+            ({"mamba": 2, "attn": 2},
+             cfg.replace(num_layers=2, attn_every=1, **u)),
+        ]
+    elif fam == "encdec":
+        stacks = {"enc": cfg.encoder_layers, "dec": cfg.num_layers}
+        variants = [
+            ({"enc": 1, "dec": 1},
+             cfg.replace(num_layers=1, encoder_layers=1, **u)),
+            ({"enc": 2, "dec": 1},
+             cfg.replace(num_layers=1, encoder_layers=2, **u)),
+            ({"enc": 1, "dec": 2},
+             cfg.replace(num_layers=2, encoder_layers=1, **u)),
+        ]
+    else:
+        raise ValueError(fam)
+    return stacks, variants
+
+
+def _measure(cfg, shape, mesh, **bl_kwargs) -> dict:
+    fn, args, in_sh, out_sh = build_lowerable(cfg, shape, mesh, **bl_kwargs)
+    with mesh:
+        compiled = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh
+                           ).lower(*args).compile()
+    cost = compiled.cost_analysis()
+    coll = collective_bytes(compiled.as_text())
+    out = {"flops": float(cost.get("flops", 0.0)),
+           "hbm_bytes": float(cost.get("bytes accessed", 0.0))}
+    for k, v in coll.items():
+        out[f"coll/{k}"] = float(v)
+    return out
+
+
+def extrapolated_costs(cfg, shape, mesh, **bl_kwargs) -> dict:
+    stacks, variants = _variant_cfgs(cfg)
+    names = list(stacks)
+    rows, costs = [], []
+    for counts, vcfg in variants:
+        rows.append([1.0] + [float(counts[n]) for n in names])
+        costs.append(_measure(vcfg, shape, mesh, **bl_kwargs))
+    keys = set()
+    for c in costs:
+        keys.update(c)
+    A = np.asarray(rows)
+    full = np.asarray([1.0] + [float(stacks[n]) for n in names])
+    out = {}
+    for k in keys:
+        y = np.asarray([c.get(k, 0.0) for c in costs])
+        coef, *_ = np.linalg.lstsq(A, y, rcond=None)
+        out[k] = float(max(0.0, full @ coef))
+    return out
+
+
+def model_flops(cfg, shape) -> float:
+    """6*N*D with N = active params (MoE: active experts only)."""
+    params = jax.eval_shape(
+        lambda: M.init_params(cfg, jax.random.PRNGKey(0),
+                              max_seq=min(shape.seq_len, 4096)))
+    total = sum(int(np.prod(x.shape))
+                for x in jax.tree_util.tree_leaves(params))
+    if cfg.num_experts:
+        # subtract inactive routed-expert params from the 6*N*D count
+        def moe_leaves(t):
+            out = []
+            def rec(d, path):
+                for k, v in d.items():
+                    if isinstance(v, dict):
+                        rec(v, path + (k,))
+                    elif "moe" in path and k in ("w_in", "w_gate", "w_out"):
+                        out.append(v)
+            rec(t, ())
+            return out
+        inactive = 0
+        for leaf in moe_leaves(params):
+            E = cfg.num_experts
+            frac = (E - cfg.experts_per_token) / E
+            inactive += int(np.prod(leaf.shape)) * frac
+        total -= inactive
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode"
+                                   else 1)
+    mult = 6 if shape.kind == "train" else 2
+    return mult * total * tokens
+
+
+def run_one(arch: str, shape_name: str, *, multi_pod: bool,
+            save_hlo: str = "", extrapolate: bool = True,
+            seq_parallel: bool = True, fsdp: bool = True,
+            serve_fsdp: bool = False, remat: bool = True,
+            cfg_overrides: dict = None) -> dict:
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    if (cfg.name, shape_name) in SKIPS:
+        return {"arch": cfg.name, "shape": shape_name,
+                "mesh": "2x16x16" if multi_pod else "16x16",
+                "status": "SKIP", "reason": SKIPS[(cfg.name, shape_name)]}
+    cfg = adapt_config(cfg, shape)
+    if cfg_overrides:
+        cfg = cfg.replace(**cfg_overrides)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    nchips = int(np.prod(list(mesh.shape.values())))
+
+    t0 = time.time()
+    bl_kwargs = dict(fsdp=fsdp, seq_parallel=seq_parallel,
+                     serve_fsdp=serve_fsdp, remat=remat)
+    fn, args, in_sh, out_sh = build_lowerable(cfg, shape, mesh, **bl_kwargs)
+    with mesh:
+        jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh)
+        lowered = jitted.lower(*args)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    if save_hlo:
+        with open(save_hlo, "w") as f:
+            f.write(hlo)
+    coll_raw = collective_bytes(hlo)
+
+    raw = {"flops": float(cost.get("flops", 0.0)),
+           "hbm_bytes": float(cost.get("bytes accessed", 0.0))}
+    if extrapolate and not multi_pod:
+        corr = extrapolated_costs(cfg, shape, mesh, **bl_kwargs)
+    else:
+        corr = dict(raw)
+        for k, v in coll_raw.items():
+            corr[f"coll/{k}"] = float(v)
+
+    flops_per_dev = corr["flops"]
+    bytes_per_dev = corr["hbm_bytes"]
+    coll = {k.split("/", 1)[1]: v for k, v in corr.items()
+            if k.startswith("coll/")}
+    hlo_flops = flops_per_dev * nchips
+    mf = model_flops(cfg, shape)
+
+    compute_s = flops_per_dev / PEAK_FLOPS
+    memory_s = bytes_per_dev / HBM_BW
+    coll_s = coll.get("total", 0) / ICI_BW
+    dominant = max((("compute", compute_s), ("memory", memory_s),
+                    ("collective", coll_s)), key=lambda kv: kv[1])[0]
+
+    res = {
+        "arch": cfg.name, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "status": "OK",
+        "chips": nchips,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "bytes_per_device": int(getattr(mem, "temp_size_in_bytes", 0)
+                                + getattr(mem, "argument_size_in_bytes", 0)
+                                + getattr(mem, "output_size_in_bytes", 0)),
+        "temp_bytes": int(getattr(mem, "temp_size_in_bytes", 0)),
+        "arg_bytes": int(getattr(mem, "argument_size_in_bytes", 0)),
+        "flops_per_device": flops_per_dev,
+        "hlo_flops_total": hlo_flops,
+        "model_flops": mf,
+        "useful_ratio": round(mf / hlo_flops, 4) if hlo_flops else None,
+        "hbm_bytes_per_device": bytes_per_dev,
+        "collective_bytes_per_device": coll,
+        "raw_uncorrected": raw,
+        "roofline": {
+            "compute_s": compute_s,
+            "memory_s": memory_s,
+            "collective_s": coll_s,
+            "dominant": dominant,
+        },
+    }
+    return res
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--json", default="")
+    ap.add_argument("--save-hlo", default="")
+    args = ap.parse_args(argv)
+
+    combos = []
+    archs = list(ARCH_ALIASES) if args.all or not args.arch else [args.arch]
+    shapes = list(INPUT_SHAPES) if args.all or not args.shape \
+        else [args.shape]
+    meshes = [False, True] if (args.both_meshes or args.all) else \
+        [args.multi_pod]
+    for a in archs:
+        for s in shapes:
+            for mp in meshes:
+                combos.append((a, s, mp))
+
+    results = []
+    failed = 0
+    for a, s, mp in combos:
+        tag = f"{a} x {s} x {'2x16x16' if mp else '16x16'}"
+        try:
+            r = run_one(a, s, multi_pod=mp, save_hlo=args.save_hlo)
+            results.append(r)
+            if r["status"] == "OK":
+                rf = r["roofline"]
+                print(f"OK   {tag}: mem/dev={r['bytes_per_device']/2**30:.2f}"
+                      f"GiB flops/dev={r['flops_per_device']:.3e} "
+                      f"useful={r['useful_ratio']} "
+                      f"dominant={rf['dominant']} "
+                      f"(C={rf['compute_s']:.4f}s M={rf['memory_s']:.4f}s "
+                      f"X={rf['collective_s']:.4f}s) "
+                      f"compile={r['compile_s']}s", flush=True)
+            else:
+                print(f"SKIP {tag}: {r['reason']}", flush=True)
+        except Exception as e:  # noqa: BLE001
+            failed += 1
+            print(f"FAIL {tag}: {type(e).__name__}: {e}", flush=True)
+            results.append({"arch": a, "shape": s,
+                            "mesh": "2x16x16" if mp else "16x16",
+                            "status": "FAIL", "error": str(e)[:500]})
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(results, f, indent=1)
+    print(f"done: {sum(r['status'] == 'OK' for r in results)} ok, "
+          f"{sum(r['status'] == 'SKIP' for r in results)} skip, "
+          f"{failed} fail")
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

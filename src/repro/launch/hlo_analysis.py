@@ -1,0 +1,46 @@
+"""HLO post-SPMD analysis helpers (import-safe: touches no jax state).
+
+``collective_bytes`` sums the output-shape bytes of every collective op in
+a compiled HLO module — the source for the roofline's collective term.
+"""
+from __future__ import annotations
+
+import re
+
+PEAK_FLOPS = 197e12          # TPU v5e bf16 FLOP/s per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+
+_COLL_RE = re.compile(
+    r"(\w[\w.\-]*)\s*=\s*(.+?)\s+(all-gather|all-reduce|reduce-scatter|"
+    r"all-to-all|collective-permute)\(")
+_SHAPE_RE = re.compile(r"(bf16|f32|f16|s32|u32|s8|u8|pred|f64|s64)"
+                       r"\[([\d,]*)\]")
+_DTYPE_BYTES = {"bf16": 2, "f16": 2, "f32": 4, "s32": 4, "u32": 4, "s8": 1,
+                "u8": 1, "pred": 1, "f64": 8, "s64": 8}
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-op-kind byte totals (shapes in post-SPMD HLO are per-device)."""
+    out = {}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        op = m.group(3)
+        b = _shape_bytes(m.group(2))
+        out[op] = out.get(op, 0) + b
+        out["total"] = out.get("total", 0) + b
+    return out

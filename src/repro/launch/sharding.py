@@ -1,0 +1,221 @@
+"""Sharding rules: logical-axis tables mapping param/cache/batch pytree
+paths to ``PartitionSpec``s (MaxText-style), plus a context-var driven
+``constrain`` used inside model code (no-op when no rules are active).
+
+Mesh axes:
+  single-pod:  ("data", "model")           = (16, 16)
+  multi-pod:   ("pod", "data", "model")    = (2, 16, 16)
+
+Policy (see DESIGN.md §4):
+  * weights: "model" on the feature/expert/head output dim; for *training*
+    an additional FSDP-style "data" shard on the other dim (ZeRO-ish; the
+    optimizer moments inherit the same spec);
+  * batch dims over ("pod", "data") when divisible, else replicated
+    (long_500k has B=1);
+  * KV/latent cache sequence dim over "model" (heads are often too few),
+    and additionally over "data" when the batch can't be sharded.
+"""
+from __future__ import annotations
+
+import contextvars
+import re
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_ACTIVE: contextvars.ContextVar = contextvars.ContextVar(
+    "repro_sharding_rules", default=None)
+
+
+class ShardingRules:
+    """Holds the mesh + activation specs; installed via ``activate()``."""
+
+    def __init__(self, mesh: Mesh, *, batch_size: int, fsdp: bool,
+                 seq_parallel: bool = True):
+        self.mesh = mesh
+        self.fsdp = fsdp
+        self.seq_parallel = seq_parallel
+        axes = mesh.axis_names
+        self.multi_pod = "pod" in axes
+        self.model_size = mesh.shape["model"]
+        batch_axes = ("pod", "data") if self.multi_pod else ("data",)
+        n_batch_shards = int(np.prod([mesh.shape[a] for a in batch_axes]))
+        self.batch_axis = batch_axes if batch_size % n_batch_shards == 0 \
+            else None
+        # when the batch is unshardable (long_500k), spread caches over data
+        self.seq_axes = ("data", "model") if self.batch_axis is None \
+            else ("model",)
+
+    # -- activation specs used by shd.constrain ---------------------------
+    def spec_for(self, kind: str, shape) -> Optional[P]:
+        b = self.batch_axis
+        if kind == "act":      # (B, S, D) or (B, 1, D)
+            # Megatron-style sequence parallelism on the residual stream:
+            # shards the per-layer saved activations over `model` too.
+            if (self.seq_parallel and len(shape) == 3
+                    and shape[1] % self.model_size == 0):
+                return P(b, "model", None)
+            return P(b, None, None)
+        if kind == "logits":   # (B, S, V)
+            return P(b, None, "model")
+        return None
+
+    def activate(self):
+        return _ActiveRules(self)
+
+
+class _ActiveRules:
+    def __init__(self, rules):
+        self.rules = rules
+
+    def __enter__(self):
+        self.tok = _ACTIVE.set(self.rules)
+        return self.rules
+
+    def __exit__(self, *exc):
+        _ACTIVE.reset(self.tok)
+
+
+def constrain(x: jax.Array, kind: str) -> jax.Array:
+    rules = _ACTIVE.get()
+    if rules is None:
+        return x
+    spec = rules.spec_for(kind, x.shape)
+    if spec is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(rules.mesh, spec))
+
+
+# ===========================================================================
+# parameter specs
+# ===========================================================================
+
+# (regex on '/'-joined path, spec builder).  `d` = "data" iff fsdp else None.
+_PARAM_RULES = [
+    # embeddings: (V, D) vocab over model
+    (r"embedding$",            lambda d: P("model", d)),
+    (r"lm_head$",              lambda d: P(d, "model")),
+    (r"(enc|dec)_pos$",        lambda d: P(None, None)),
+    # attention
+    (r"attn/w[qkv]$",          lambda d: P(d, "model")),
+    (r"attn/wo$",              lambda d: P("model", d)),
+    (r"attn/b[qkv]$",          lambda d: P("model")),
+    (r"xattn/w[qkv]$",         lambda d: P(d, "model")),
+    (r"xattn/wo$",             lambda d: P("model", d)),
+    (r"xattn/b[qkv]$",         lambda d: P("model")),
+    # MLA
+    (r"attn/wq_a$",            lambda d: P(d, "model")),
+    (r"attn/wq_b$",            lambda d: P(d, "model")),
+    (r"attn/wkv_a$",           lambda d: P(d, None)),
+    (r"attn/w_k_nope$",        lambda d: P(d, "model", None)),
+    (r"attn/w_v$",             lambda d: P(d, "model", None)),
+    # MLP
+    (r"mlp/w_(in|gate)$",      lambda d: P(d, "model")),
+    (r"mlp/w_out$",            lambda d: P("model", d)),
+    (r"shared/w_(in|gate)$",   lambda d: P(d, "model")),
+    (r"shared/w_out$",         lambda d: P("model", d)),
+    # MoE: experts over model (expert parallel)
+    (r"moe/router$",           lambda d: P(None, None)),
+    (r"moe/w_(in|gate)$",      lambda d: P("model", d, None)),
+    (r"moe/w_out$",            lambda d: P("model", None, d)),
+    # SSM
+    (r"ssm/w_z$",              lambda d: P(d, "model")),
+    (r"ssm/w_xbc$",            lambda d: P(d, "model")),
+    (r"ssm/w_dt$",             lambda d: P(d, "model")),
+    (r"ssm/conv_w$",           lambda d: P(None, "model")),
+    (r"ssm/conv_b$",           lambda d: P("model")),
+    (r"ssm/(A_log|D|dt_bias)$", lambda d: P("model")),
+    (r"ssm/norm$",             lambda d: P("model")),
+    (r"ssm/out_proj$",         lambda d: P("model", d)),
+]
+
+
+def _path_str(path) -> str:
+    parts = []
+    for e in path:
+        if isinstance(e, jax.tree_util.DictKey):
+            parts.append(str(e.key))
+        elif isinstance(e, jax.tree_util.GetAttrKey):
+            parts.append(e.name)
+        else:
+            parts.append(str(e))
+    return "/".join(parts)
+
+
+def _spec_matches(spec: P, shape, mesh: Mesh, stacked: bool) -> P:
+    """Prepend the layer-stack axis, drop axes that don't divide."""
+    spec = tuple(spec)
+    if stacked:
+        spec = (None,) + spec
+    spec = spec + (None,) * (len(shape) - len(spec))
+    fixed = []
+    for dim, ax in zip(shape, spec):
+        if ax is None:
+            fixed.append(None)
+            continue
+        axes = ax if isinstance(ax, tuple) else (ax,)
+        n = int(np.prod([mesh.shape[a] for a in axes]))
+        fixed.append(ax if dim % n == 0 else None)
+    return P(*fixed)
+
+
+def param_specs(params, mesh: Mesh, *, fsdp: bool):
+    """PartitionSpec pytree matching ``params``."""
+    d = "data" if fsdp else None
+
+    def one(path, leaf):
+        s = _path_str(path)
+        stacked = bool(re.search(r"(^|/)((enc_|dec_|dense_|moe_)?layers)/",
+                                 s))
+        for pat, builder in _PARAM_RULES:
+            if re.search(pat, s):
+                return _spec_matches(builder(d), leaf.shape, mesh, stacked)
+        # norms, scalars, biases — replicate
+        return P(*([None] * len(leaf.shape)))
+
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def cache_specs(cache, mesh: Mesh, rules: ShardingRules):
+    """KV/state cache specs.  Leaves are (L, B, C, ...) or (L, B, H, P, N)."""
+    b = rules.batch_axis
+    seq = rules.seq_axes
+
+    def one(path, leaf):
+        s = _path_str(path)
+        shape = leaf.shape
+        if re.search(r"(^|/)(k|v|c|kr)$", s):
+            # (L, B, C, K, hd) or (L, B, C, dc)
+            spec = [None, b, seq] + [None] * (len(shape) - 3)
+        elif s.endswith("state"):
+            spec = [None, b, "model"] + [None] * (len(shape) - 3)
+        elif s.endswith("conv"):
+            spec = [None, b, None, "model"]
+        else:
+            spec = [None] * len(shape)
+        return _spec_matches(P(*spec[1:]), shape, mesh, stacked=True)
+
+    return jax.tree_util.tree_map_with_path(one, cache)
+
+
+def batch_specs(batch, mesh: Mesh, rules: ShardingRules):
+    b = rules.batch_axis
+
+    def one(path, leaf):
+        s = _path_str(path)
+        if s.endswith("pos"):
+            return P()
+        if s.endswith("positions"):          # (3, B, S)
+            return _spec_matches(P(None, b), leaf.shape, mesh, False)
+        return _spec_matches(P(b), leaf.shape, mesh, False)
+
+    return jax.tree_util.tree_map_with_path(one, batch)
+
+
+def to_named(specs, mesh: Mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))

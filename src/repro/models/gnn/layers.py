@@ -1,0 +1,170 @@
+"""GNN layers built on the SAGA-NN / message-passing abstraction
+(survey Table 5 algorithms: GCN, GraphSAGE, GAT, GIN).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.abstraction import (DeviceGraph, MessagePassing,
+                                    segment_softmax, segment_sum)
+
+
+def _dense(key, din, dout):
+    return (jax.random.normal(key, (din, dout), jnp.float32)
+            / np.sqrt(din))
+
+
+class GCNLayer(MessagePassing):
+    """Kipf & Welling: h' = ReLU(D^-1/2 A D^-1/2 H W)."""
+
+    aggregate = "sum"
+
+    @staticmethod
+    def init(key, din, dout):
+        return {"w": _dense(key, din, dout),
+                "b": jnp.zeros((dout,), jnp.float32)}
+
+    def __call__(self, p, g: DeviceGraph, x_src, x_dst=None, *,
+                 use_kernel=False):
+        if x_dst is None:
+            x_dst = x_src[:g.num_dst]
+        h = x_src @ p["w"]
+        norm_src = jax.lax.rsqrt(g.out_deg)
+        norm_dst = jax.lax.rsqrt(g.in_deg)
+        feat_e = jnp.take(h, g.edge_src, axis=0)
+        coef = jnp.take(norm_src, g.edge_src) * jnp.take(norm_dst, g.edge_dst)
+        msgs = feat_e * (coef * g.edge_mask)[:, None]
+        agg = segment_sum(msgs, g.edge_dst, g.num_dst, use_kernel=use_kernel)
+        return agg + p["b"]
+
+
+class SAGELayer(MessagePassing):
+    """GraphSAGE-mean: h' = W_self h + W_nbr mean(neighbors)."""
+
+    aggregate = "mean"
+
+    @staticmethod
+    def init(key, din, dout):
+        k1, k2 = jax.random.split(key)
+        return {"w_self": _dense(k1, din, dout),
+                "w_nbr": _dense(k2, din, dout),
+                "b": jnp.zeros((dout,), jnp.float32)}
+
+    def update(self, p, agg, self_feat):
+        return self_feat @ p["w_self"] + agg @ p["w_nbr"] + p["b"]
+
+
+class GATLayer(MessagePassing):
+    """Single-projection multi-head GAT with per-destination softmax."""
+
+    def __init__(self, heads: int = 4):
+        self.heads = heads
+
+    @staticmethod
+    def init(key, din, dout, heads: int = 4):
+        hd = dout // heads
+        k1, k2, k3 = jax.random.split(key, 3)
+        return {"w": _dense(k1, din, dout),
+                "a_src": jax.random.normal(k2, (heads, hd), jnp.float32) * 0.1,
+                "a_dst": jax.random.normal(k3, (heads, hd), jnp.float32) * 0.1}
+
+    def __call__(self, p, g: DeviceGraph, x_src, x_dst=None, *,
+                 use_kernel=False):
+        if x_dst is None:
+            x_dst = x_src[:g.num_dst]
+        heads, hd = p["a_src"].shape
+        hs = (x_src @ p["w"]).reshape(-1, heads, hd)
+        hdst = (x_dst @ p["w"]).reshape(-1, heads, hd)
+        es = jnp.einsum("nhd,hd->nh", hs, p["a_src"])
+        ed = jnp.einsum("nhd,hd->nh", hdst, p["a_dst"])
+        logits = jax.nn.leaky_relu(
+            jnp.take(es, g.edge_src, axis=0)
+            + jnp.take(ed, g.edge_dst, axis=0), 0.2)        # (E, heads)
+        alpha = segment_softmax(logits, g.edge_dst, g.num_dst, g.edge_mask)
+        msgs = jnp.take(hs, g.edge_src, axis=0) * alpha[..., None]
+        agg = segment_sum(msgs.reshape(-1, heads * hd), g.edge_dst,
+                          g.num_dst, use_kernel=use_kernel)
+        return agg
+
+
+class GINLayer(MessagePassing):
+    """GIN: h' = MLP((1 + eps) h + sum(neighbors))."""
+
+    aggregate = "sum"
+
+    @staticmethod
+    def init(key, din, dout):
+        k1, k2 = jax.random.split(key)
+        return {"w1": _dense(k1, din, dout),
+                "w2": _dense(k2, dout, dout),
+                "b1": jnp.zeros((dout,), jnp.float32),
+                "b2": jnp.zeros((dout,), jnp.float32),
+                "eps": jnp.zeros((), jnp.float32)}
+
+    def update(self, p, agg, self_feat):
+        h = (1.0 + p["eps"]) * self_feat + agg
+        h = jax.nn.relu(h @ p["w1"] + p["b1"])
+        return h @ p["w2"] + p["b2"]
+
+
+class GGNNLayer(MessagePassing):
+    """Gated Graph NN [Li+ 2015] (survey Table 5): GRU update over the
+    aggregated neighbor messages; dimensions stay constant across layers."""
+
+    aggregate = "sum"
+
+    @staticmethod
+    def init(key, din, dout):
+        # GG-NN requires din == dout (recurrent state); project if needed
+        ks = jax.random.split(key, 4)
+        return {"w_msg": _dense(ks[0], dout, dout),
+                "w_zrh": _dense(ks[1], dout, 3 * dout),
+                "u_zrh": _dense(ks[2], dout, 3 * dout),
+                "proj": _dense(ks[3], din, dout) if din != dout else None,
+                "b": jnp.zeros((3 * dout,), jnp.float32)}
+
+    def __call__(self, p, g, x_src, x_dst=None, *, use_kernel=False):
+        if p.get("proj") is not None:
+            x_src = x_src @ p["proj"]
+        if x_dst is None:
+            x_dst = x_src[:g.num_dst]
+        msgs = jnp.take(x_src @ p["w_msg"], g.edge_src, axis=0)
+        msgs = msgs * g.edge_mask[:, None].astype(msgs.dtype)
+        agg = segment_sum(msgs, g.edge_dst, g.num_dst,
+                          use_kernel=use_kernel)
+        d = x_dst.shape[-1]
+        gates = agg @ p["w_zrh"] + x_dst @ p["u_zrh"] + p["b"]
+        z = jax.nn.sigmoid(gates[:, :d])
+        r = jax.nn.sigmoid(gates[:, d:2 * d])
+        # candidate uses reset-gated state through the U path
+        h_tilde = jnp.tanh(agg @ p["w_zrh"][:, 2 * d:]
+                           + (r * x_dst) @ p["u_zrh"][:, 2 * d:])
+        return (1 - z) * x_dst + z * h_tilde
+
+
+class APPNPLayer(MessagePassing):
+    """APPNP [Klicpera+ 2019] (PyG's Table 5 list): personalized-PageRank
+    propagation h' = (1-α)·Â h + α·h0 (no weights; pair with an MLP head)."""
+
+    aggregate = "sum"
+
+    def __init__(self, alpha: float = 0.1):
+        self.alpha = alpha
+
+    @staticmethod
+    def init(key, din, dout):
+        return {"w": _dense(key, din, dout)}  # used only by the first hop
+
+    def propagate(self, g, h, h0, *, use_kernel=False):
+        coef = (jax.lax.rsqrt(g.out_deg)[g.edge_src]
+                * jax.lax.rsqrt(g.in_deg)[g.edge_dst] * g.edge_mask)
+        msgs = jnp.take(h, g.edge_src, axis=0) * coef[:, None]
+        agg = segment_sum(msgs, g.edge_dst, g.num_dst,
+                          use_kernel=use_kernel)
+        return (1 - self.alpha) * agg + self.alpha * h0
+
+
+LAYER_TYPES = {"gcn": GCNLayer, "sage": SAGELayer, "gat": GATLayer,
+               "gin": GINLayer, "ggnn": GGNNLayer}

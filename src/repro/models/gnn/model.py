@@ -1,0 +1,129 @@
+"""GNN models: stacks of abstraction-layer GNN layers, usable in
+full-graph mode (one DeviceGraph) or mini-batch mode (list of Blocks).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.abstraction import DeviceGraph
+from repro.models.gnn.layers import LAYER_TYPES, GATLayer
+
+
+@dataclasses.dataclass(frozen=True)
+class GNNConfig:
+    arch: str = "gcn"                 # gcn | sage | gat | gin | ggnn | appnp
+    feat_dim: int = 64
+    hidden: int = 128
+    num_classes: int = 8
+    num_layers: int = 2
+    gat_heads: int = 4
+    appnp_k: int = 4                  # APPNP propagation hops
+    appnp_alpha: float = 0.1
+    use_kernel: bool = False          # Pallas segment-sum for aggregation
+
+
+def init_gnn(cfg: GNNConfig, key) -> List[dict]:
+    if cfg.arch == "appnp":
+        # MLP head (feat -> hidden -> classes), then weightless propagation
+        from repro.models.gnn.layers import _dense
+        return [{"w": _dense(jax.random.fold_in(key, 0), cfg.feat_dim,
+                             cfg.hidden)},
+                {"w": _dense(jax.random.fold_in(key, 1), cfg.hidden,
+                             cfg.num_classes)}]
+    layer_cls = LAYER_TYPES[cfg.arch]
+    dims = ([cfg.feat_dim] + [cfg.hidden] * (cfg.num_layers - 1)
+            + [cfg.num_classes])
+    params = []
+    for i in range(cfg.num_layers):
+        k = jax.random.fold_in(key, i)
+        if cfg.arch == "gat":
+            params.append(layer_cls.init(k, dims[i], dims[i + 1],
+                                         heads=cfg.gat_heads))
+        else:
+            params.append(layer_cls.init(k, dims[i], dims[i + 1]))
+    return params
+
+
+def _make_layer(cfg: GNNConfig):
+    if cfg.arch == "gat":
+        return GATLayer(cfg.gat_heads)
+    return LAYER_TYPES[cfg.arch]()
+
+
+def forward_full(cfg: GNNConfig, params, g: DeviceGraph, x) -> jax.Array:
+    """Full-graph forward (NeuGraph/ROC style, no sampling)."""
+    if cfg.arch == "appnp":
+        from repro.models.gnn.layers import APPNPLayer
+        layer = APPNPLayer(cfg.appnp_alpha)
+        h = jax.nn.relu(x @ params[0]["w"]) @ params[1]["w"]
+        h0 = h
+        for _ in range(cfg.appnp_k):
+            h = layer.propagate(g, h, h0, use_kernel=cfg.use_kernel)
+        return h
+    layer = _make_layer(cfg)
+    h = x
+    for i, p in enumerate(params):
+        h = layer(p, g, h, use_kernel=cfg.use_kernel)
+        if i + 1 < len(params):
+            h = jax.nn.relu(h)
+    return h
+
+
+def forward_blocks(cfg: GNNConfig, params, blocks: Sequence[DeviceGraph],
+                   x_input) -> jax.Array:
+    """Mini-batch forward over sampled bipartite blocks (DistDGL style).
+    ``x_input``: features of blocks[0].src_nodes."""
+    layer = _make_layer(cfg)
+    h = x_input
+    for i, (p, g) in enumerate(zip(params, blocks)):
+        h = layer(p, g, h, use_kernel=cfg.use_kernel)
+        if i + 1 < len(params):
+            h = jax.nn.relu(h)
+    return h
+
+
+def nll_loss(logits, labels, mask=None):
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    nll = logz - gold
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)
+
+
+def accuracy(logits, labels, mask=None):
+    correct = (jnp.argmax(logits, -1) == labels).astype(jnp.float32)
+    if mask is not None:
+        return jnp.sum(correct * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(correct)
+
+
+def make_fullgraph_train_step(cfg: GNNConfig, optimizer):
+    def step(params, opt_state, g: DeviceGraph, x, labels, mask):
+        def loss_fn(p):
+            logits = forward_full(cfg, p, g, x)
+            return nll_loss(logits, labels, mask)
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        params, opt_state = optimizer.apply(params, grads, opt_state)
+        return params, opt_state, loss
+
+    return step
+
+
+def make_minibatch_train_step(cfg: GNNConfig, optimizer):
+    def step(params, opt_state, blocks, x_input, labels, mask):
+        def loss_fn(p):
+            logits = forward_blocks(cfg, p, blocks, x_input)
+            return nll_loss(logits, labels, mask)
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        params, opt_state = optimizer.apply(params, grads, opt_state)
+        return params, opt_state, loss
+
+    return step

@@ -1,0 +1,222 @@
+"""Attention variants: GQA (with KV / sliding-window ring caches) and
+DeepSeek-style MLA (multi-head latent attention, absorbed-matmul decode).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.transformer import layers as L
+
+NEG_INF = L.NEG_INF
+
+
+# ===========================================================================
+# GQA
+# ===========================================================================
+
+def init_gqa(cfg, key, dtype):
+    hd = cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": L.dense_init(ks[0], cfg.d_model, cfg.num_heads * hd, dtype),
+        "wk": L.dense_init(ks[1], cfg.d_model, cfg.num_kv_heads * hd, dtype),
+        "wv": L.dense_init(ks[2], cfg.d_model, cfg.num_kv_heads * hd, dtype),
+        "wo": L.dense_init(ks[3], cfg.num_heads * hd, cfg.d_model, dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((cfg.num_heads * hd,), dtype)
+        p["bk"] = jnp.zeros((cfg.num_kv_heads * hd,), dtype)
+        p["bv"] = jnp.zeros((cfg.num_kv_heads * hd,), dtype)
+    return p
+
+
+def _qkv(cfg, p, x):
+    B, S, _ = x.shape
+    hd = cfg.resolved_head_dim
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(B, S, cfg.num_heads, hd)
+    k = k.reshape(B, S, cfg.num_kv_heads, hd)
+    v = v.reshape(B, S, cfg.num_kv_heads, hd)
+    return q, k, v
+
+
+def _rope_qk(cfg, q, k, positions):
+    if cfg.pos_emb != "rope":
+        return q, k
+    q = L.apply_rope(q, positions, cfg.rope_theta, cfg.partial_rotary,
+                     cfg.mrope_sections)
+    k = L.apply_rope(k, positions, cfg.rope_theta, cfg.partial_rotary,
+                     cfg.mrope_sections)
+    return q, k
+
+
+def gqa_forward(cfg, p, x, positions, *, causal=True, window=0,
+                return_kv=False):
+    """Full-sequence attention (train / prefill). positions: (B,S) or (3,B,S)."""
+    q, k, v = _qkv(cfg, p, x)
+    q, k = _rope_qk(cfg, q, k, positions)
+    out = L.attention(q, k, v, causal=causal, q_offset=0, window=window,
+                      q_chunk=cfg.attn_q_chunk,
+                      unroll=cfg.scan_unroll > 1)
+    out = out.reshape(x.shape[0], x.shape[1], -1) @ p["wo"]
+    if return_kv:
+        return out, (k, v)
+    return out
+
+
+def gqa_decode(cfg, p, x, cache_k, cache_v, pos, *, window=0):
+    """One-token decode.  x: (B, 1, D); pos: scalar absolute position.
+
+    cache_[kv]: (B, C, K, hd) where C = seq capacity (full) or window size
+    (ring buffer).  Returns (out, cache_k, cache_v).
+    """
+    B = x.shape[0]
+    hd = cfg.resolved_head_dim
+    q, k, v = _qkv(cfg, p, x)
+    if cfg.pos_emb == "rope":
+        pos_arr = jnp.full((B, 1), pos, jnp.int32)
+        if cfg.mrope_sections is not None:
+            pos_arr = jnp.broadcast_to(pos_arr, (3, B, 1))
+        q, k = _rope_qk(cfg, q, k, pos_arr)
+
+    C = cache_k.shape[1]
+    slot = jnp.mod(pos, C) if window else pos
+    cache_k = jax.lax.dynamic_update_slice(cache_k, k.astype(cache_k.dtype),
+                                           (0, slot, 0, 0))
+    cache_v = jax.lax.dynamic_update_slice(cache_v, v.astype(cache_v.dtype),
+                                           (0, slot, 0, 0))
+
+    slots = jnp.arange(C)
+    if window:
+        # ring buffer: slot s currently holds absolute position
+        # pos - ((pos - s) mod C); valid iff that position has been written.
+        abs_pos = pos - jnp.mod(pos - slots, C)
+        valid = abs_pos >= 0
+    else:
+        valid = slots <= pos
+
+    K = cfg.num_kv_heads
+    G = cfg.num_heads // K
+    qg = (q * (1.0 / np.sqrt(hd))).reshape(B, 1, K, G, hd)
+    logits = jnp.einsum("bqkgh,bskh->bkgqs", qg.astype(jnp.float32),
+                        cache_k.astype(jnp.float32))
+    logits = jnp.where(valid[None, None, None, None, :], logits, NEG_INF)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", w, cache_v.astype(jnp.float32))
+    out = out.reshape(B, 1, cfg.num_heads * hd).astype(x.dtype) @ p["wo"]
+    return out, cache_k, cache_v
+
+
+# ===========================================================================
+# MLA (DeepSeek-V3)
+# ===========================================================================
+
+def init_mla(cfg, key, dtype):
+    H = cfg.num_heads
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    dc, dq = cfg.kv_lora_rank, cfg.q_lora_rank
+    ks = jax.random.split(key, 6)
+    return {
+        "wq_a": L.dense_init(ks[0], cfg.d_model, dq, dtype),
+        "q_norm": jnp.ones((dq,), jnp.float32),
+        "wq_b": L.dense_init(ks[1], dq, H * (dn + dr), dtype),
+        "wkv_a": L.dense_init(ks[2], cfg.d_model, dc + dr, dtype),
+        "kv_norm": jnp.ones((dc,), jnp.float32),
+        "w_k_nope": (jax.random.normal(ks[3], (dc, H, dn), jnp.float32)
+                     / np.sqrt(dc)).astype(dtype),
+        "w_v": (jax.random.normal(ks[4], (dc, H, dv), jnp.float32)
+                / np.sqrt(dc)).astype(dtype),
+        "wo": L.dense_init(ks[5], H * dv, cfg.d_model, dtype),
+    }
+
+
+def _mla_q(cfg, p, x, positions):
+    B, S, _ = x.shape
+    H = cfg.num_heads
+    dn, dr = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim
+    q = L.rmsnorm(x @ p["wq_a"], p["q_norm"]) @ p["wq_b"]
+    q = q.reshape(B, S, H, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = L.apply_rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _mla_latent(cfg, p, x, positions):
+    """Latent path: returns (c_n normalized latent (B,S,dc), k_rope (B,S,1,dr))."""
+    dc, dr = cfg.kv_lora_rank, cfg.qk_rope_head_dim
+    ckr = x @ p["wkv_a"]
+    c, k_rope = ckr[..., :dc], ckr[..., dc:]
+    c_n = L.rmsnorm(c, p["kv_norm"])
+    k_rope = L.apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta)
+    return c_n, k_rope
+
+
+def mla_forward(cfg, p, x, positions, *, window=0, return_cache=False):
+    """Train / prefill: decompress latent to per-head K/V, chunked attention."""
+    B, S, _ = x.shape
+    H = cfg.num_heads
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    q_nope, q_rope = _mla_q(cfg, p, x, positions)
+    c_n, k_rope = _mla_latent(cfg, p, x, positions)
+
+    k_nope = jnp.einsum("bsc,chn->bshn", c_n, p["w_k_nope"])
+    v = jnp.einsum("bsc,chv->bshv", c_n, p["w_v"])
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope, (B, S, H, dr))], axis=-1)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+
+    out = L.attention(q, k, v, causal=True, q_offset=0, window=window,
+                      q_chunk=cfg.attn_q_chunk,
+                      unroll=cfg.scan_unroll > 1)
+    out = out.reshape(B, S, H * dv) @ p["wo"]
+    if return_cache:
+        return out, (c_n, k_rope[:, :, 0, :])
+    return out
+
+
+def mla_decode(cfg, p, x, cache_c, cache_kr, pos, *, window=0):
+    """Absorbed-matmul decode: attention scores/values computed in the
+    dc-dim latent space (never materializes per-head K/V for the cache).
+
+    cache_c: (B, C, dc) normalized latents; cache_kr: (B, C, dr).
+    """
+    B = x.shape[0]
+    H = cfg.num_heads
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    dc = cfg.kv_lora_rank
+    pos_arr = jnp.full((B, 1), pos, jnp.int32)
+    q_nope, q_rope = _mla_q(cfg, p, x, pos_arr)          # (B,1,H,dn/dr)
+    c_n, k_rope = _mla_latent(cfg, p, x, pos_arr)        # (B,1,dc), (B,1,1,dr)
+
+    C = cache_c.shape[1]
+    slot = jnp.mod(pos, C) if window else pos
+    cache_c = jax.lax.dynamic_update_slice(
+        cache_c, c_n.astype(cache_c.dtype), (0, slot, 0))
+    cache_kr = jax.lax.dynamic_update_slice(
+        cache_kr, k_rope[:, :, 0, :].astype(cache_kr.dtype), (0, slot, 0))
+
+    slots = jnp.arange(C)
+    if window:
+        valid = (pos - jnp.mod(pos - slots, C)) >= 0
+    else:
+        valid = slots <= pos
+
+    # absorb W_k_nope into the query
+    q_abs = jnp.einsum("bqhn,chn->bqhc", q_nope, p["w_k_nope"])  # (B,1,H,dc)
+    scores = (jnp.einsum("bqhc,bsc->bhqs", q_abs.astype(jnp.float32),
+                         cache_c.astype(jnp.float32))
+              + jnp.einsum("bqhr,bsr->bhqs", q_rope.astype(jnp.float32),
+                           cache_kr.astype(jnp.float32)))
+    scores = scores / np.sqrt(dn + dr)
+    scores = jnp.where(valid[None, None, None, :], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("bhqs,bsc->bqhc", w, cache_c.astype(jnp.float32))
+    out = jnp.einsum("bqhc,chv->bqhv", ctx.astype(x.dtype), p["w_v"])
+    out = out.reshape(B, 1, H * dv) @ p["wo"]
+    return out, cache_c, cache_kr

@@ -1,0 +1,236 @@
+"""Shared transformer building blocks (pure JAX, functional).
+
+Params are plain nested dicts of jnp arrays. Layer stacks keep a leading
+``num_layers`` axis and are consumed with ``jax.lax.scan`` so the lowered
+HLO is O(1) in depth (essential for the 80 dry-run compiles).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def dtype_of(name: str):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32,
+            "float16": jnp.float16,
+            "float8_e4m3fn": jnp.float8_e4m3fn}[name]
+
+
+def cache_dtype_of(cfg):
+    return dtype_of(cfg.cache_dtype or cfg.compute_dtype)
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, in_dim: int, out_dim: int, dtype) -> jax.Array:
+    scale = 1.0 / np.sqrt(in_dim)
+    return (jax.random.normal(key, (in_dim, out_dim), jnp.float32) * scale
+            ).astype(dtype)
+
+
+def stacked(keys, fn):
+    """vmap an init function over a leading layer axis of keys."""
+    return jax.vmap(fn)(keys)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def layernorm(x: jax.Array, scale: jax.Array, bias: jax.Array,
+              eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps)
+    out = out * scale.astype(jnp.float32) + bias.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def apply_norm(cfg, x, p):
+    if cfg.norm == "layernorm":
+        return layernorm(x, p["scale"], p["bias"])
+    return rmsnorm(x, p["scale"])
+
+
+def init_norm(cfg, dim: int):
+    if cfg.norm == "layernorm":
+        return {"scale": jnp.ones((dim,), jnp.float32),
+                "bias": jnp.zeros((dim,), jnp.float32)}
+    return {"scale": jnp.ones((dim,), jnp.float32)}
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings (standard / partial / M-RoPE)
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> np.ndarray:
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2, np.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float,
+               rotary_frac: float = 1.0,
+               mrope_sections=None) -> jax.Array:
+    """x: (B, S, H, hd); positions: (B, S) or (3, B, S) for M-RoPE."""
+    hd = x.shape[-1]
+    rot = int(hd * rotary_frac)
+    rot -= rot % 2
+    x_rot, x_pass = x[..., :rot], x[..., rot:]
+    freqs = jnp.asarray(rope_freqs(rot, theta))            # (rot/2,)
+
+    if mrope_sections is not None:
+        # qwen2-vl M-RoPE: frequency bands split into (t, h, w) sections,
+        # each using its own position stream.  positions: (3, B, S)
+        sec = np.cumsum(np.array(mrope_sections))[:-1]
+        pos_per_band = jnp.concatenate(
+            [jnp.broadcast_to(positions[i][..., None],
+                              positions.shape[1:] + (n,))
+             for i, n in enumerate(mrope_sections)], axis=-1)  # (B,S,rot/2)
+        del sec
+        angles = pos_per_band.astype(jnp.float32) * freqs      # (B,S,rot/2)
+    else:
+        angles = positions[..., None].astype(jnp.float32) * freqs  # (B,S,rot/2)
+
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x_rot.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return jnp.concatenate([out.astype(x.dtype), x_pass], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def init_mlp(cfg, key, d_model: int, d_ff: int, dtype):
+    ks = jax.random.split(key, 3)
+    p = {"w_in": dense_init(ks[0], d_model, d_ff, dtype),
+         "w_out": dense_init(ks[1], d_ff, d_model, dtype)}
+    if cfg.mlp_gated:
+        p["w_gate"] = dense_init(ks[2], d_model, d_ff, dtype)
+    return p
+
+
+def mlp(cfg, x: jax.Array, p) -> jax.Array:
+    act = jax.nn.silu if cfg.act == "silu" else (
+        lambda v: jax.nn.gelu(v, approximate=True))
+    h = x @ p["w_in"]
+    if cfg.mlp_gated:
+        h = act(x @ p["w_gate"]) * h
+    else:
+        h = act(h)
+    return h @ p["w_out"]
+
+
+# ---------------------------------------------------------------------------
+# chunked (flash-style) attention — pure JAX oracle-grade implementation
+# ---------------------------------------------------------------------------
+
+NEG_INF = -1e30
+
+
+def _attend_block(q, k, v, bias):
+    """q:(B,Sq,K,G,hd) k:(B,Skv,K,hd) v:(B,Skv,K,hd) bias:(B?,Sq,Skv)->out."""
+    logits = jnp.einsum("bqkgh,bskh->bkgqs", q.astype(jnp.float32),
+                        k.astype(jnp.float32))
+    logits = logits + bias[:, None, None, :, :]
+    return logits
+
+
+def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+              causal: bool,
+              q_offset,
+              window: int = 0,
+              kv_valid_len=None,
+              q_chunk: int = 1024,
+              unroll: bool = False,
+              out_dtype=None) -> jax.Array:
+    """Grouped-query attention with online-softmax chunking over queries.
+
+    q: (B, Sq, H, hd);  k, v: (B, Skv, K, hd) with H = K * G.
+    ``q_offset``: absolute position of q[0] (int or traced scalar) so that
+    causal/sliding-window masks work for prefill and decode alike.
+    ``window`` > 0 enables sliding-window masking |i-j| < window.
+    ``kv_valid_len``: mask out kv positions >= this (ragged caches).
+    """
+    B, Sq, H, hd = q.shape
+    K = k.shape[2]
+    G = H // K
+    hd_v = v.shape[-1]
+    out_dtype = out_dtype or q.dtype
+    scale = 1.0 / np.sqrt(hd)
+    qg = (q * scale).reshape(B, Sq, K, G, hd)
+    kv_pos = jnp.arange(k.shape[1])
+
+    def block(q_blk, q_pos):
+        # q_blk: (B, c, K, G, hd); q_pos: (c,) absolute positions
+        logits = jnp.einsum("bqkgh,bskh->bkgqs", q_blk.astype(jnp.float32),
+                            k.astype(jnp.float32))
+        mask = jnp.ones((q_blk.shape[1], k.shape[1]), bool)
+        if causal:
+            mask &= kv_pos[None, :] <= q_pos[:, None]
+        if window:
+            mask &= kv_pos[None, :] > q_pos[:, None] - window
+        if kv_valid_len is not None:
+            mask &= (kv_pos < kv_valid_len)[None, :]
+        logits = jnp.where(mask[None, None, None], logits, NEG_INF)
+        w = jax.nn.softmax(logits, axis=-1)
+        return jnp.einsum("bkgqs,bskh->bqkgh", w, v.astype(jnp.float32))
+
+    if Sq <= q_chunk:
+        out = block(qg, q_offset + jnp.arange(Sq))
+    else:
+        nblk = -(-Sq // q_chunk)
+        pad = nblk * q_chunk - Sq
+        qg_p = jnp.pad(qg, ((0, 0), (0, pad), (0, 0), (0, 0), (0, 0)))
+        qg_p = qg_p.reshape(B, nblk, q_chunk, K, G, hd).swapaxes(0, 1)
+        pos = (q_offset + jnp.arange(nblk * q_chunk)).reshape(nblk, q_chunk)
+
+        def body(_, inp):
+            qb, pb = inp
+            return None, block(qb, pb)
+
+        _, outs = jax.lax.scan(body, None, (qg_p, pos),
+                               unroll=nblk if unroll else 1)
+        out = outs.swapaxes(0, 1).reshape(B, nblk * q_chunk, K, G, hd_v)[:, :Sq]
+
+    return out.reshape(B, Sq, H, hd_v).astype(out_dtype)
+
+
+# ---------------------------------------------------------------------------
+# token embedding / unembedding
+# ---------------------------------------------------------------------------
+
+def init_embed(cfg, key, dtype):
+    V = cfg.padded_vocab
+    p = {"embedding": (jax.random.normal(key, (V, cfg.d_model), jnp.float32)
+                       * 0.02).astype(dtype)}
+    if not cfg.tie_embeddings:
+        p["lm_head"] = dense_init(jax.random.fold_in(key, 1), cfg.d_model, V,
+                                  dtype)
+    return p
+
+
+def embed(cfg, p, tokens: jax.Array) -> jax.Array:
+    x = jnp.take(p["embedding"], tokens, axis=0)
+    if cfg.embed_scale:
+        x = x * np.sqrt(cfg.d_model).astype(np.float32)
+    return x.astype(dtype_of(cfg.compute_dtype))
+
+
+def unembed(cfg, p, x: jax.Array) -> jax.Array:
+    if cfg.tie_embeddings:
+        return jnp.einsum("...d,vd->...v", x, p["embedding"])
+    return x @ p["lm_head"]

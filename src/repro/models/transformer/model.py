@@ -1,0 +1,665 @@
+"""Unified model zoo: init / forward / prefill / decode for all six
+architecture families.  Everything is functional; layer stacks carry a
+leading ``num_layers`` axis and are consumed with ``jax.lax.scan``.
+
+Batch conventions
+-----------------
+train / prefill:
+  lm families:  {"tokens": (B,S) i32, "labels": (B,S) i32}
+  vlm:          {"embeds": (B,S,D), "positions": (3,B,S) i32, "labels": (B,S)}
+  encdec:       {"enc_embeds": (B,S,D), "tokens": (B,S), "labels": (B,S)}
+decode:
+  {"token": (B,1) i32  (or "embeds": (B,1,D) for vlm), "pos": () i32}
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.transformer import attention as A
+from repro.models.transformer import layers as L
+from repro.models.transformer import moe as M
+from repro.models.transformer import ssm as S
+from repro.launch import sharding as shd
+
+
+# ===========================================================================
+# init
+# ===========================================================================
+
+def _init_dense_layer(cfg, key, dtype):
+    ks = jax.random.split(key, 2)
+    return {"attn": A.init_gqa(cfg, ks[0], dtype),
+            "mlp": L.init_mlp(cfg, ks[1], cfg.d_model, cfg.d_ff, dtype),
+            "ln1": L.init_norm(cfg, cfg.d_model),
+            "ln2": L.init_norm(cfg, cfg.d_model)}
+
+
+def _init_moe_layer(cfg, key, dtype):
+    ks = jax.random.split(key, 2)
+    return {"attn": A.init_gqa(cfg, ks[0], dtype),
+            "moe": M.init_moe(cfg, ks[1], dtype),
+            "ln1": L.init_norm(cfg, cfg.d_model),
+            "ln2": L.init_norm(cfg, cfg.d_model)}
+
+
+def _init_mla_dense_layer(cfg, key, dtype):
+    ks = jax.random.split(key, 2)
+    return {"attn": A.init_mla(cfg, ks[0], dtype),
+            "mlp": L.init_mlp(cfg, ks[1], cfg.d_model, cfg.d_ff, dtype),
+            "ln1": L.init_norm(cfg, cfg.d_model),
+            "ln2": L.init_norm(cfg, cfg.d_model)}
+
+
+def _init_mla_moe_layer(cfg, key, dtype):
+    ks = jax.random.split(key, 2)
+    return {"attn": A.init_mla(cfg, ks[0], dtype),
+            "moe": M.init_moe(cfg, ks[1], dtype),
+            "ln1": L.init_norm(cfg, cfg.d_model),
+            "ln2": L.init_norm(cfg, cfg.d_model)}
+
+
+def _init_ssm_layer(cfg, key, dtype):
+    return {"ssm": S.init_ssm(cfg, key, dtype),
+            "ln": L.init_norm(cfg, cfg.d_model)}
+
+
+def _init_encdec_layer(cfg, key, dtype, cross: bool):
+    ks = jax.random.split(key, 3)
+    p = {"attn": A.init_gqa(cfg, ks[0], dtype),
+         "mlp": L.init_mlp(cfg, ks[1], cfg.d_model, cfg.d_ff, dtype),
+         "ln1": L.init_norm(cfg, cfg.d_model),
+         "ln2": L.init_norm(cfg, cfg.d_model)}
+    if cross:
+        p["xattn"] = A.init_gqa(cfg, ks[2], dtype)
+        p["ln_x"] = L.init_norm(cfg, cfg.d_model)
+    return p
+
+
+def init_params(cfg, key, *, max_seq: int = 4096) -> Dict[str, Any]:
+    dtype = L.dtype_of(cfg.param_dtype)
+    k_embed, k_layers, k_extra = jax.random.split(key, 3)
+    params: Dict[str, Any] = {"embed": L.init_embed(cfg, k_embed, dtype),
+                              "ln_f": L.init_norm(cfg, cfg.d_model)}
+
+    def stack(n, fn, key):
+        return L.stacked(jax.random.split(key, n), lambda k: fn(cfg, k, dtype))
+
+    fam = cfg.family
+    if fam in ("dense", "vlm"):
+        params["layers"] = stack(cfg.num_layers, _init_dense_layer, k_layers)
+    elif fam == "moe":
+        params["layers"] = stack(cfg.num_layers, _init_moe_layer, k_layers)
+    elif fam == "mla_moe":
+        nd = cfg.first_dense_layers
+        params["dense_layers"] = stack(nd, _init_mla_dense_layer, k_layers)
+        params["moe_layers"] = stack(cfg.num_layers - nd, _init_mla_moe_layer,
+                                     jax.random.fold_in(k_layers, 1))
+    elif fam == "ssm":
+        params["layers"] = stack(cfg.num_layers, _init_ssm_layer, k_layers)
+    elif fam == "hybrid":
+        params["layers"] = stack(cfg.num_layers, _init_ssm_layer, k_layers)
+        params["shared_attn"] = _init_dense_layer(cfg, k_extra, dtype)
+    elif fam == "encdec":
+        params["enc_layers"] = stack(
+            cfg.encoder_layers,
+            lambda c, k, d: _init_encdec_layer(c, k, d, cross=False), k_layers)
+        params["dec_layers"] = stack(
+            cfg.num_layers,
+            lambda c, k, d: _init_encdec_layer(c, k, d, cross=True),
+            jax.random.fold_in(k_layers, 2))
+        params["ln_enc"] = L.init_norm(cfg, cfg.d_model)
+        params["enc_pos"] = (jax.random.normal(
+            jax.random.fold_in(k_extra, 0), (max_seq, cfg.d_model),
+            jnp.float32) * 0.02).astype(dtype)
+        params["dec_pos"] = (jax.random.normal(
+            jax.random.fold_in(k_extra, 1), (max_seq, cfg.d_model),
+            jnp.float32) * 0.02).astype(dtype)
+    else:
+        raise ValueError(fam)
+    return params
+
+
+def param_count(params) -> int:
+    return sum(int(np.prod(x.shape)) for x in jax.tree_util.tree_leaves(params))
+
+
+# ===========================================================================
+# layer bodies (shared by forward and decode scans)
+# ===========================================================================
+
+def _dense_body(cfg, x, p, positions, *, window=0, causal=True):
+    h = L.apply_norm(cfg, x, p["ln1"])
+    x = x + A.gqa_forward(cfg, p["attn"], h, positions, causal=causal,
+                          window=window)
+    h = L.apply_norm(cfg, x, p["ln2"])
+    x = x + L.mlp(cfg, h, p["mlp"])
+    return shd.constrain(x, "act")
+
+
+def _moe_body(cfg, x, p, positions, *, window=0):
+    h = L.apply_norm(cfg, x, p["ln1"])
+    x = x + A.gqa_forward(cfg, p["attn"], h, positions, window=window)
+    h = L.apply_norm(cfg, x, p["ln2"])
+    x = x + _moe(cfg, p["moe"], h)
+    return shd.constrain(x, "act")
+
+
+def _mla_body(cfg, x, p, positions, *, window=0, use_moe=True):
+    h = L.apply_norm(cfg, x, p["ln1"])
+    x = x + A.mla_forward(cfg, p["attn"], h, positions, window=window)
+    h = L.apply_norm(cfg, x, p["ln2"])
+    if use_moe:
+        x = x + _moe(cfg, p["moe"], h)
+    else:
+        x = x + L.mlp(cfg, h, p["mlp"])
+    return shd.constrain(x, "act")
+
+
+def _ssm_body(cfg, x, p):
+    h = L.apply_norm(cfg, x, p["ln"])
+    x = x + S.ssm_forward(cfg, p["ssm"], h)
+    return shd.constrain(x, "act")
+
+
+def _moe(cfg, p, x):
+    """MoE implementation dispatch: GShard one-hot dispatch (baseline) or
+    explicit shard_map expert parallelism (cfg.moe_impl == "ep")."""
+    if cfg.moe_impl == "ep":
+        from repro.core.parallel import moe_expert_parallel
+        return moe_expert_parallel(cfg, p, x,
+                                   capacity_factor=cfg.moe_capacity_factor)
+    return M.moe_block(cfg, p, x)
+
+
+def _scan(cfg, f, init, xs):
+    """lax.scan that fully unrolls when cfg.scan_unroll > 1 (dry-run cost
+    extrapolation needs every body instance visible to HLO cost analysis)."""
+    n = jax.tree_util.tree_leaves(xs)[0].shape[0]
+    return jax.lax.scan(f, init, xs, unroll=n if cfg.scan_unroll > 1 else 1)
+
+
+def _scan_layers(cfg, body, x, stacked_params, *, remat=False):
+    fn = jax.checkpoint(body) if remat else body
+
+    def step(carry, p):
+        return fn(carry, p), None
+
+    x, _ = _scan(cfg, step, x, stacked_params)
+    return x
+
+
+# ===========================================================================
+# forward (train / scoring path; no cache)
+# ===========================================================================
+
+def forward(cfg, params, batch, *, remat=False, window=0):
+    fam = cfg.family
+    if fam == "vlm":
+        x = batch["embeds"].astype(L.dtype_of(cfg.compute_dtype))
+        positions = batch["positions"]
+    elif fam == "encdec":
+        return _encdec_forward(cfg, params, batch, remat=remat)
+    else:
+        x = L.embed(cfg, params["embed"], batch["tokens"])
+        B, Ssz = batch["tokens"].shape
+        positions = jnp.broadcast_to(jnp.arange(Ssz)[None], (B, Ssz))
+    x = shd.constrain(x, "act")
+
+    if fam in ("dense", "vlm"):
+        body = lambda h, p: _dense_body(cfg, h, p, positions, window=window)
+        x = _scan_layers(cfg, body, x, params["layers"], remat=remat)
+    elif fam == "moe":
+        body = lambda h, p: _moe_body(cfg, h, p, positions, window=window)
+        x = _scan_layers(cfg, body, x, params["layers"], remat=remat)
+    elif fam == "mla_moe":
+        body_d = lambda h, p: _mla_body(cfg, h, p, positions, window=window,
+                                        use_moe=False)
+        body_m = lambda h, p: _mla_body(cfg, h, p, positions, window=window,
+                                        use_moe=True)
+        x = _scan_layers(cfg, body_d, x, params["dense_layers"], remat=remat)
+        x = _scan_layers(cfg, body_m, x, params["moe_layers"], remat=remat)
+    elif fam == "ssm":
+        body = lambda h, p: _ssm_body(cfg, h, p)
+        x = _scan_layers(cfg, body, x, params["layers"], remat=remat)
+    elif fam == "hybrid":
+        x = _hybrid_forward(cfg, params, x, positions, remat=remat,
+                            window=window)
+    else:
+        raise ValueError(fam)
+
+    x = L.apply_norm(cfg, x, params["ln_f"])
+    logits = L.unembed(cfg, params["embed"], x)
+    return shd.constrain(logits, "logits")
+
+
+def _hybrid_groups(cfg):
+    n_groups = cfg.num_layers // cfg.attn_every
+    return n_groups, cfg.attn_every
+
+
+def _hybrid_forward(cfg, params, x, positions, *, remat=False, window=0):
+    """Zamba2: groups of `attn_every` mamba layers, shared attn block between."""
+    n_groups, per = _hybrid_groups(cfg)
+    grouped = jax.tree.map(
+        lambda a: a.reshape((n_groups, per) + a.shape[1:]), params["layers"])
+    shared = params["shared_attn"]
+
+    def group_body(h, p_group):
+        h = _scan_layers(cfg, lambda hh, p: _ssm_body(cfg, hh, p), h,
+                         p_group, remat=remat)
+        h = _dense_body(cfg, h, shared, positions, window=window)
+        return h, None
+
+    x, _ = _scan(cfg, group_body, x, grouped)
+    return x
+
+
+def _encdec_forward(cfg, params, batch, *, remat=False):
+    dt = L.dtype_of(cfg.compute_dtype)
+    enc = batch["enc_embeds"].astype(dt)
+    Se = enc.shape[1]
+    enc = enc + params["enc_pos"][:Se].astype(dt)
+    B = enc.shape[0]
+    pos_e = jnp.broadcast_to(jnp.arange(Se)[None], (B, Se))
+
+    enc_body = lambda h, p: _dense_body(cfg, h, p, pos_e, causal=False)
+    enc = _scan_layers(cfg, enc_body, enc, params["enc_layers"], remat=remat)
+    enc = L.apply_norm(cfg, enc, params["ln_enc"])
+
+    tok = batch["tokens"]
+    Sd = tok.shape[1]
+    x = L.embed(cfg, params["embed"], tok) + params["dec_pos"][:Sd].astype(dt)
+    pos_d = jnp.broadcast_to(jnp.arange(Sd)[None], (B, Sd))
+
+    def dec_body(h, p):
+        hh = L.apply_norm(cfg, h, p["ln1"])
+        h = h + A.gqa_forward(cfg, p["attn"], hh, pos_d, causal=True)
+        hh = L.apply_norm(cfg, h, p["ln_x"])
+        # cross attention: q from decoder, kv from encoder output
+        q, _, _ = A._qkv(cfg, p["xattn"], hh)
+        _, k, v = A._qkv(cfg, p["xattn"], enc)
+        o = L.attention(q, k, v, causal=False, q_offset=0)
+        h = h + o.reshape(h.shape[0], h.shape[1], -1) @ p["xattn"]["wo"]
+        hh = L.apply_norm(cfg, h, p["ln2"])
+        h = h + L.mlp(cfg, hh, p["mlp"])
+        return shd.constrain(h, "act")
+
+    x = _scan_layers(cfg, dec_body, x, params["dec_layers"], remat=remat)
+    x = L.apply_norm(cfg, x, params["ln_f"])
+    return L.unembed(cfg, params["embed"], x)
+
+
+# ===========================================================================
+# loss / train step
+# ===========================================================================
+
+def loss_fn(cfg, params, batch, *, remat=True):
+    logits = forward(cfg, params, batch, remat=remat)
+    labels = batch["labels"]
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    return jnp.mean(nll)
+
+
+def make_train_step(cfg, optimizer, *, remat=True, donate=True):
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state, metrics)."""
+
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(
+            lambda p: loss_fn(cfg, p, batch, remat=remat))(params)
+        params, opt_state = optimizer.apply(params, grads, opt_state)
+        gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                             for g in jax.tree_util.tree_leaves(grads)))
+        return params, opt_state, {"loss": loss, "grad_norm": gnorm}
+
+    return train_step
+
+
+# ===========================================================================
+# caches
+# ===========================================================================
+
+def init_cache(cfg, batch_size: int, cache_len: int, *, enc_len: int = 0):
+    """Zero-initialized cache pytree for decode.  ``cfg.cache_dtype``
+    (e.g. float8_e4m3fn) selects a narrower storage dtype — decode writes
+    cast on store and reads upcast to fp32 (see attention.py)."""
+    dt = L.cache_dtype_of(cfg)
+    LN = cfg.num_layers
+    hd = cfg.resolved_head_dim
+    K = cfg.num_kv_heads
+    fam = cfg.family
+    C = min(cache_len, cfg.sliding_window) if cfg.sliding_window else cache_len
+
+    def kv(n_layers, length):
+        return {"k": jnp.zeros((n_layers, batch_size, length, K, hd), dt),
+                "v": jnp.zeros((n_layers, batch_size, length, K, hd), dt)}
+
+    if fam in ("dense", "vlm", "moe"):
+        return kv(LN, C)
+    if fam == "mla_moe":
+        def lat(n):
+            return {"c": jnp.zeros((n, batch_size, C, cfg.kv_lora_rank), dt),
+                    "kr": jnp.zeros((n, batch_size, C, cfg.qk_rope_head_dim),
+                                    dt)}
+        return {"dense": lat(cfg.first_dense_layers),
+                "moe": lat(LN - cfg.first_dense_layers)}
+    if fam == "ssm":
+        return _ssm_cache(cfg, LN, batch_size)
+    if fam == "hybrid":
+        n_groups, _ = _hybrid_groups(cfg)
+        return {"ssm": _ssm_cache(cfg, LN, batch_size),
+                "attn": kv(n_groups, C)}
+    if fam == "encdec":
+        return {"self": kv(LN, C), "cross": kv(LN, enc_len)}
+    raise ValueError(fam)
+
+
+def _ssm_cache(cfg, n_layers, batch_size):
+    return {
+        "state": jnp.zeros((n_layers, batch_size, cfg.ssm_nheads,
+                            cfg.ssm_head_dim, cfg.ssm_state), jnp.float32),
+        "conv": jnp.zeros((n_layers, batch_size, cfg.ssm_conv - 1,
+                           S.conv_dim(cfg)),
+                          L.dtype_of(cfg.compute_dtype)),
+    }
+
+
+# ===========================================================================
+# decode step (one token, KV/state cache)
+# ===========================================================================
+
+def decode_step(cfg, params, cache, batch):
+    """batch: {"token": (B,1)} or {"embeds": (B,1,D)} plus {"pos": ()}.
+    Returns (logits (B, vocab), new_cache)."""
+    fam = cfg.family
+    pos = batch["pos"]
+    W = cfg.sliding_window
+
+    if fam == "vlm":
+        x = batch["embeds"].astype(L.dtype_of(cfg.compute_dtype))
+    else:
+        x = L.embed(cfg, params["embed"], batch["token"])
+    x = shd.constrain(x, "act")
+
+    def attn_scan(x, stacked_p, kv_cache, body):
+        def step(carry, inp):
+            p, ck, cv = inp
+            h, ck, cv = body(carry, p, ck, cv)
+            return h, (ck, cv)
+
+        x, (ks, vs) = _scan(cfg, step, x, (stacked_p, kv_cache["k"],
+                                            kv_cache["v"]))
+        return x, {"k": ks, "v": vs}
+
+    if fam in ("dense", "vlm", "moe"):
+        def body(h, p, ck, cv):
+            hh = L.apply_norm(cfg, h, p["ln1"])
+            o, ck, cv = A.gqa_decode(cfg, p["attn"], hh, ck, cv, pos, window=W)
+            h = h + o
+            hh = L.apply_norm(cfg, h, p["ln2"])
+            if fam == "moe":
+                h = h + _moe(cfg, p["moe"], hh)
+            else:
+                h = h + L.mlp(cfg, hh, p["mlp"])
+            return h, ck, cv
+
+        x, cache = attn_scan(x, params["layers"], cache, body)
+
+    elif fam == "mla_moe":
+        def make_body(use_moe):
+            def body(carry, inp):
+                p, cc, ckr = inp
+                h = carry
+                hh = L.apply_norm(cfg, h, p["ln1"])
+                o, cc, ckr = A.mla_decode(cfg, p["attn"], hh, cc, ckr, pos,
+                                          window=W)
+                h = h + o
+                hh = L.apply_norm(cfg, h, p["ln2"])
+                if use_moe:
+                    h = h + _moe(cfg, p["moe"], hh)
+                else:
+                    h = h + L.mlp(cfg, hh, p["mlp"])
+                return h, (cc, ckr)
+            return body
+
+        x, (cs_d, krs_d) = _scan(
+            cfg, make_body(False), x,
+            (params["dense_layers"], cache["dense"]["c"],
+             cache["dense"]["kr"]))
+        x, (cs_m, krs_m) = _scan(
+            cfg, make_body(True), x,
+            (params["moe_layers"], cache["moe"]["c"], cache["moe"]["kr"]))
+        cache = {"dense": {"c": cs_d, "kr": krs_d},
+                 "moe": {"c": cs_m, "kr": krs_m}}
+
+    elif fam == "ssm":
+        x, cache = _ssm_decode_scan(cfg, params["layers"], cache, x)
+
+    elif fam == "hybrid":
+        n_groups, per = _hybrid_groups(cfg)
+        grouped_p = jax.tree.map(
+            lambda a: a.reshape((n_groups, per) + a.shape[1:]),
+            params["layers"])
+        grouped_c = jax.tree.map(
+            lambda a: a.reshape((n_groups, per) + a.shape[1:]), cache["ssm"])
+        shared = params["shared_attn"]
+
+        def group_body(h, inp):
+            p_g, c_g, ck, cv = inp
+            h, c_g = _ssm_decode_scan(cfg, p_g, c_g, h)
+            hh = L.apply_norm(cfg, h, shared["ln1"])
+            o, ck, cv = A.gqa_decode(cfg, shared["attn"], hh, ck, cv, pos,
+                                     window=W)
+            h = h + o
+            hh = L.apply_norm(cfg, h, shared["ln2"])
+            h = h + L.mlp(cfg, hh, shared["mlp"])
+            return h, (c_g, ck, cv)
+
+        x, (c_new, ks, vs) = _scan(
+            cfg, group_body, x,
+            (grouped_p, grouped_c, cache["attn"]["k"], cache["attn"]["v"]))
+        cache = {"ssm": jax.tree.map(
+            lambda a: a.reshape((cfg.num_layers,) + a.shape[2:]), c_new),
+            "attn": {"k": ks, "v": vs}}
+
+    elif fam == "encdec":
+        x = x + params["dec_pos"][pos].astype(x.dtype)  # learned positions
+
+        def body(h, inp):
+            p, ck, cv, xk, xv = inp
+            hh = L.apply_norm(cfg, h, p["ln1"])
+            o, ck, cv = A.gqa_decode(cfg, p["attn"], hh, ck, cv, pos, window=W)
+            h = h + o
+            hh = L.apply_norm(cfg, h, p["ln_x"])
+            q, _, _ = A._qkv(cfg, p["xattn"], hh)
+            o = L.attention(q, xk, xv, causal=False, q_offset=0)
+            h = h + o.reshape(h.shape[0], 1, -1) @ p["xattn"]["wo"]
+            hh = L.apply_norm(cfg, h, p["ln2"])
+            h = h + L.mlp(cfg, hh, p["mlp"])
+            return h, (ck, cv)
+
+        x, (ks, vs) = _scan(
+            cfg, body, x, (params["dec_layers"], cache["self"]["k"],
+                      cache["self"]["v"], cache["cross"]["k"],
+                      cache["cross"]["v"]))
+        cache = {"self": {"k": ks, "v": vs}, "cross": cache["cross"]}
+    else:
+        raise ValueError(fam)
+
+    x = L.apply_norm(cfg, x, params["ln_f"])
+    logits = L.unembed(cfg, params["embed"], x)[:, 0]
+    return logits, cache
+
+
+def _ssm_decode_scan(cfg, stacked_p, cache, x):
+    def body(h, inp):
+        p, st, cv = inp
+        hh = L.apply_norm(cfg, h, p["ln"])
+        o, st, cv = S.ssm_decode(cfg, p["ssm"], hh, st, cv)
+        return h + o, (st, cv)
+
+    x, (sts, cvs) = _scan(cfg, body, x,
+                          (stacked_p, cache["state"], cache["conv"]))
+    return x, {"state": sts, "conv": cvs}
+
+
+# ===========================================================================
+# prefill (forward + cache construction)
+# ===========================================================================
+
+def prefill(cfg, params, batch):
+    """Processes a full prompt and returns (last-token logits, cache).
+
+    For the dry-run ``prefill_32k`` shape this is the lowered entry point.
+    Sliding-window configs keep a ring cache of the last `window` positions.
+    """
+    fam = cfg.family
+    if fam == "vlm":
+        x = batch["embeds"].astype(L.dtype_of(cfg.compute_dtype))
+        positions = batch["positions"]
+        B, Ssz = x.shape[0], x.shape[1]
+    elif fam == "encdec":
+        return _encdec_prefill(cfg, params, batch)
+    else:
+        B, Ssz = batch["tokens"].shape
+        x = L.embed(cfg, params["embed"], batch["tokens"])
+        positions = jnp.broadcast_to(jnp.arange(Ssz)[None], (B, Ssz))
+    x = shd.constrain(x, "act")
+    W = cfg.sliding_window
+    C = min(Ssz, W) if W else Ssz
+
+    cache_dt = L.cache_dtype_of(cfg)
+
+    def to_ring(k):
+        # keep the last C positions; ring slot of position p is p % C
+        tail = k[:, Ssz - C:].astype(cache_dt)
+        roll = (Ssz - C) % C if C else 0
+        return jnp.roll(tail, shift=roll, axis=1)
+
+    if fam in ("dense", "vlm", "moe"):
+        def body(h, p):
+            hh = L.apply_norm(cfg, h, p["ln1"])
+            o, (k, v) = A.gqa_forward(cfg, p["attn"], hh, positions, window=W,
+                                      return_kv=True)
+            h = h + o
+            hh = L.apply_norm(cfg, h, p["ln2"])
+            if fam == "moe":
+                h = h + _moe(cfg, p["moe"], hh)
+            else:
+                h = h + L.mlp(cfg, hh, p["mlp"])
+            return h, (to_ring(k), to_ring(v))
+
+        def step(carry, p):
+            h, kv = body(carry, p)
+            return h, kv
+
+        x, (ks, vs) = _scan(cfg, step, x, params["layers"])
+        cache = {"k": ks, "v": vs}
+
+    elif fam == "mla_moe":
+        def make_body(use_moe):
+            def body(h, p):
+                hh = L.apply_norm(cfg, h, p["ln1"])
+                o, (c_n, kr) = A.mla_forward(cfg, p["attn"], hh, positions,
+                                             window=W, return_cache=True)
+                h = h + o
+                hh = L.apply_norm(cfg, h, p["ln2"])
+                if use_moe:
+                    h = h + _moe(cfg, p["moe"], hh)
+                else:
+                    h = h + L.mlp(cfg, hh, p["mlp"])
+                return h, (to_ring(c_n), to_ring(kr))
+            return body
+
+        x, (cs, krs) = _scan(cfg, lambda c, p: make_body(False)(c, p), x,
+                             params["dense_layers"])
+        cache_d = {"c": cs, "kr": krs}
+        x, (cs, krs) = _scan(cfg, lambda c, p: make_body(True)(c, p), x,
+                             params["moe_layers"])
+        cache = {"dense": cache_d, "moe": {"c": cs, "kr": krs}}
+
+    elif fam == "ssm":
+        def body(h, p):
+            hh = L.apply_norm(cfg, h, p["ln"])
+            o, (st, cv) = S.ssm_forward(cfg, p["ssm"], hh, return_cache=True)
+            return h + o, (st, cv)
+
+        x, (sts, cvs) = _scan(cfg, body, x, params["layers"])
+        cache = {"state": sts, "conv": cvs}
+
+    elif fam == "hybrid":
+        n_groups, per = _hybrid_groups(cfg)
+        grouped = jax.tree.map(
+            lambda a: a.reshape((n_groups, per) + a.shape[1:]),
+            params["layers"])
+        shared = params["shared_attn"]
+
+        def ssm_body(h, p):
+            hh = L.apply_norm(cfg, h, p["ln"])
+            o, (st, cv) = S.ssm_forward(cfg, p["ssm"], hh, return_cache=True)
+            return h + o, (st, cv)
+
+        def group_body(h, p_g):
+            h, ssm_c = _scan(cfg, ssm_body, h, p_g)
+            hh = L.apply_norm(cfg, h, shared["ln1"])
+            o, (k, v) = A.gqa_forward(cfg, shared["attn"], hh, positions,
+                                      window=W, return_kv=True)
+            h = h + o
+            hh = L.apply_norm(cfg, h, shared["ln2"])
+            h = h + L.mlp(cfg, hh, shared["mlp"])
+            return h, (ssm_c, to_ring(k), to_ring(v))
+
+        x, (ssm_c, ks, vs) = _scan(cfg, group_body, x, grouped)
+        sts, cvs = ssm_c  # inner scan stacks (state, conv) as a tuple
+        merge = lambda a: a.reshape((cfg.num_layers,) + a.shape[2:])
+        cache = {"ssm": {"state": merge(sts), "conv": merge(cvs)},
+                 "attn": {"k": ks, "v": vs}}
+    else:
+        raise ValueError(fam)
+
+    x = L.apply_norm(cfg, x, params["ln_f"])
+    logits = L.unembed(cfg, params["embed"], x[:, -1:])[:, 0]
+    return logits, cache
+
+
+def _encdec_prefill(cfg, params, batch):
+    dt = L.dtype_of(cfg.compute_dtype)
+    enc = batch["enc_embeds"].astype(dt)
+    B, Se = enc.shape[0], enc.shape[1]
+    enc = enc + params["enc_pos"][:Se].astype(dt)
+    pos_e = jnp.broadcast_to(jnp.arange(Se)[None], (B, Se))
+    enc_body = lambda h, p: _dense_body(cfg, h, p, pos_e, causal=False)
+    enc = _scan_layers(cfg, enc_body, enc, params["enc_layers"])
+    enc = L.apply_norm(cfg, enc, params["ln_enc"])
+
+    tok = batch["tokens"]
+    Sd = tok.shape[1]
+    x = L.embed(cfg, params["embed"], tok) + params["dec_pos"][:Sd].astype(dt)
+    pos_d = jnp.broadcast_to(jnp.arange(Sd)[None], (B, Sd))
+
+    def dec_body(h, p):
+        hh = L.apply_norm(cfg, h, p["ln1"])
+        o, (k, v) = A.gqa_forward(cfg, p["attn"], hh, pos_d, causal=True,
+                                  return_kv=True)
+        h = h + o
+        hh = L.apply_norm(cfg, h, p["ln_x"])
+        q, _, _ = A._qkv(cfg, p["xattn"], hh)
+        _, xk, xv = A._qkv(cfg, p["xattn"], enc)
+        o = L.attention(q, xk, xv, causal=False, q_offset=0)
+        h = h + o.reshape(B, Sd, -1) @ p["xattn"]["wo"]
+        hh = L.apply_norm(cfg, h, p["ln2"])
+        h = h + L.mlp(cfg, hh, p["mlp"])
+        return h, (k, v, xk, xv)
+
+    x, (ks, vs, xks, xvs) = _scan(cfg, dec_body, x, params["dec_layers"])
+    x = L.apply_norm(cfg, x, params["ln_f"])
+    logits = L.unembed(cfg, params["embed"], x[:, -1:])[:, 0]
+    cdt = L.cache_dtype_of(cfg)
+    return logits, {"self": {"k": ks.astype(cdt), "v": vs.astype(cdt)},
+                    "cross": {"k": xks.astype(cdt), "v": xvs.astype(cdt)}}

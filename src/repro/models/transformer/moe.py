@@ -1,0 +1,152 @@
+"""Mixture-of-Experts block.
+
+Baseline: GShard-style capacity-based one-hot dispatch einsums — the
+canonical TPU-SPMD MoE (all-to-all emerges from GSPMD propagation when the
+expert axis is sharded over ``model``).  The dispatch/combine einsums carry
+*bookkeeping* FLOPs on top of the useful expert GEMMs; this is recorded in
+the roofline (MODEL_FLOPS / HLO_FLOPs) and is the target of §Perf hillclimb
+#1, which replaces this path with an explicit shard_map all-to-all
+expert-parallel implementation (`repro.core.parallel.moe_expert_parallel`).
+
+Tokens are grouped into sequence chunks of ``group_size`` so the dispatch
+tensor is (B, n_groups, g, E, C) with C = ceil(g*k/E * capacity_factor)
+independent of the full sequence length (GShard's grouping).  Overflowing
+tokens are dropped (GShard dropping semantics, capacity_factor 1.25).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.transformer import layers as L
+
+
+def init_moe(cfg, key, dtype):
+    E, D, F = cfg.num_experts, cfg.d_model, cfg.moe_d_ff
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": (jax.random.normal(ks[0], (D, E), jnp.float32) * 0.02),
+        "w_gate": (jax.random.normal(ks[1], (E, D, F), jnp.float32)
+                   / np.sqrt(D)).astype(dtype),
+        "w_in": (jax.random.normal(ks[2], (E, D, F), jnp.float32)
+                 / np.sqrt(D)).astype(dtype),
+        "w_out": (jax.random.normal(ks[3], (E, F, D), jnp.float32)
+                  / np.sqrt(F)).astype(dtype),
+    }
+    if cfg.num_shared_experts:
+        p["shared"] = L.init_mlp(
+            cfg, ks[4], D, cfg.moe_d_ff * cfg.num_shared_experts, dtype)
+    return p
+
+
+def _capacity(group: int, k: int, E: int, factor: float) -> int:
+    return max(1, int(np.ceil(group * k / E * factor)))
+
+
+def route(cfg, p, x):
+    """Router: returns (weights (..., k), indices (..., k)) normalized."""
+    logits = jnp.einsum("...d,de->...e", x.astype(jnp.float32), p["router"])
+    gates = jax.nn.softmax(logits, axis=-1)
+    w, idx = jax.lax.top_k(gates, cfg.experts_per_token)
+    w = w / jnp.sum(w, axis=-1, keepdims=True)
+    return w, idx, gates
+
+
+def moe_block(cfg, p, x, *, capacity_factor: float = None,
+              group_size: int = 1024):
+    """x: (B, S, D) -> (B, S, D).  GShard dense-dispatch baseline.
+
+    Tokens are flattened to T = B*S and grouped into chunks of
+    ``group_size`` (so decode steps with S == 1 group over the batch)."""
+    if capacity_factor is None:
+        capacity_factor = cfg.moe_capacity_factor
+    B, S, D = x.shape
+    E, k = cfg.num_experts, cfg.experts_per_token
+    T = B * S
+    g = min(T, group_size)
+    n = T // g  # T is a power of two for all assigned shapes
+    C = _capacity(g, k, E, capacity_factor)
+
+    xg = x.reshape(n, g, D)
+    w, idx, _ = route(cfg, p, xg)                    # (n, g, k)
+
+    onehot = jax.nn.one_hot(idx, E, dtype=jnp.float32)        # (n, g, k, E)
+    # position of each (token, k) inside its expert queue, computed over the
+    # flattened (g*k) order — GShard's cumsum trick.
+    flat = onehot.reshape(n, g * k, E)
+    pos = jnp.cumsum(flat, axis=1) - flat                      # (n, g*k, E)
+    pos_of = jnp.sum(flat * pos, axis=-1).reshape(n, g, k)     # (n, g, k)
+    pos_of = pos_of.astype(jnp.int32)
+    keep = (pos_of < C).astype(jnp.float32)
+
+    pos_oh = jax.nn.one_hot(pos_of, C, dtype=jnp.float32)      # (n, g, k, C)
+    # dispatch/combine tensors: (n, g, E, C)
+    dispatch = jnp.einsum("gtke,gtkc,gtk->gtec", onehot, pos_oh, keep)
+    combine = jnp.einsum("gtec,gtk,gtke->gtec", dispatch, w,
+                         onehot)
+
+    xe = jnp.einsum("gtec,gtd->gecd", dispatch.astype(x.dtype), xg)
+    # (n, E, C, D)
+    h = jnp.einsum("gecd,edf->gecf", xe, p["w_in"])
+    hg = jnp.einsum("gecd,edf->gecf", xe, p["w_gate"])
+    act = jax.nn.silu if cfg.act == "silu" else (
+        lambda v: jax.nn.gelu(v, approximate=True))
+    h = act(hg) * h
+    ye = jnp.einsum("gecf,efd->gecd", h, p["w_out"])           # (n, E, C, D)
+    y = jnp.einsum("gtec,gecd->gtd", combine.astype(x.dtype), ye)
+    y = y.reshape(B, S, D)
+
+    if cfg.num_shared_experts:
+        y = y + L.mlp(cfg, x, p["shared"])
+    return y
+
+
+def moe_block_gathered(cfg, p, x, *, capacity_factor: float = None):
+    """Beyond-baseline single-device reference: sort-free gather dispatch.
+
+    Computes the same function as ``moe_block`` (same drop semantics under
+    per-group capacity) but with gathers instead of one-hot einsums, so the
+    HLO FLOPs ≈ the useful expert GEMMs.  Used by §Perf hillclimb #1 and
+    validated against ``moe_block`` in tests.
+    """
+    if capacity_factor is None:
+        capacity_factor = cfg.moe_capacity_factor
+    B, S, D = x.shape
+    E, k = cfg.num_experts, cfg.experts_per_token
+    T = B * S
+    C = _capacity(T, k, E, capacity_factor)
+
+    xf = x.reshape(T, D)
+    w, idx, _ = route(cfg, p, xf[None])                 # (1, T, k)
+    w, idx = w[0], idx[0]
+
+    flat_e = idx.reshape(T * k)
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)          # (T*k, E)
+    pos = jnp.cumsum(onehot, axis=0) - onehot
+    pos_of = jnp.take_along_axis(pos, flat_e[:, None], axis=1)[:, 0]
+    keep = pos_of < C
+    slot = jnp.where(keep, flat_e * C + pos_of, E * C)          # E*C = dropped
+
+    # scatter token ids into slots (one int per slot — cheap), then gather.
+    src = jnp.full((E * C + 1,), T, jnp.int32)
+    src = src.at[slot].set(jnp.arange(T * k, dtype=jnp.int32) // k)
+    src = src[:E * C]
+    xe = jnp.take(jnp.concatenate([xf, jnp.zeros((1, D), xf.dtype)]), src,
+                  axis=0).reshape(E, C, D)
+
+    h = jnp.einsum("ecd,edf->ecf", xe, p["w_in"])
+    hg = jnp.einsum("ecd,edf->ecf", xe, p["w_gate"])
+    act = jax.nn.silu if cfg.act == "silu" else (
+        lambda v: jax.nn.gelu(v, approximate=True))
+    ye = jnp.einsum("ecf,efd->ecd", act(hg) * h, p["w_out"])    # (E, C, D)
+
+    ye_flat = jnp.concatenate([ye.reshape(E * C, D),
+                               jnp.zeros((1, D), ye.dtype)])
+    contrib = jnp.take(ye_flat, jnp.minimum(slot, E * C), axis=0)  # (T*k, D)
+    wk = (w.reshape(T * k) * keep).astype(contrib.dtype)
+    y = jnp.sum((contrib * wk[:, None]).reshape(T, k, D), axis=1)
+    y = y.reshape(B, S, D)
+    if cfg.num_shared_experts:
+        y = y + L.mlp(cfg, x, p["shared"])
+    return y

@@ -1,0 +1,205 @@
+"""Mamba2 (SSD — state-space duality) block [arXiv:2405.21060].
+
+Training/prefill uses the chunked SSD algorithm: intra-chunk attention-like
+matmuls (MXU-friendly) + an inter-chunk recurrence over per-chunk states
+(``lax.scan`` over S/chunk steps).  Decode is the O(1) recurrent update.
+
+Layout follows the reference implementation:
+  in_proj -> [z (d_inner), xBC (d_inner + 2*G*N), dt (H)]
+  causal depthwise conv over xBC, SiLU
+  SSD over x:(B,S,H,P) with B,C:(B,S,G,N), dt:(B,S,H), A:(H,)
+  gated RMSNorm (y * silu(z)), out_proj
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.transformer import layers as L
+
+
+def conv_dim(cfg) -> int:
+    return cfg.d_inner + 2 * cfg.ssm_ngroups * cfg.ssm_state
+
+
+def init_ssm(cfg, key, dtype):
+    """The reference packs [z|xBC|dt] into one in_proj; we keep three
+    separate projections so each output dim shards cleanly on the `model`
+    mesh axis (packed-slice boundaries don't align with 16-way shards —
+    a TPU adaptation recorded in DESIGN.md)."""
+    D = cfg.d_model
+    H = cfg.ssm_nheads
+    din = cfg.d_inner
+    cdim = conv_dim(cfg)
+    ks = jax.random.split(key, 6)
+    return {
+        "w_z": L.dense_init(ks[0], D, din, dtype),
+        "w_xbc": L.dense_init(ks[1], D, cdim, dtype),
+        "w_dt": L.dense_init(ks[2], D, H, dtype),
+        "conv_w": (jax.random.normal(ks[3], (cfg.ssm_conv, cdim), jnp.float32)
+                   / np.sqrt(cfg.ssm_conv)).astype(dtype),
+        "conv_b": jnp.zeros((cdim,), dtype),
+        "A_log": jnp.log(jnp.arange(1, H + 1, dtype=jnp.float32)),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "norm": jnp.ones((din,), jnp.float32),
+        "out_proj": L.dense_init(ks[4], din, D, dtype),
+    }
+
+
+def _project(cfg, p, x):
+    return x @ p["w_z"], x @ p["w_xbc"], x @ p["w_dt"]
+
+
+def _causal_conv(cfg, xBC, conv_w, conv_b):
+    """Depthwise causal conv along S.  xBC: (B, S, Cd)."""
+    kw = cfg.ssm_conv
+    pad = jnp.pad(xBC, ((0, 0), (kw - 1, 0), (0, 0)))
+    # windows: out[:, s] = sum_i w[i] * pad[:, s + i]
+    out = sum(pad[:, i:i + xBC.shape[1]] * conv_w[i] for i in range(kw))
+    return jax.nn.silu(out + conv_b)
+
+
+def _segsum_decay(dA_cum):
+    """exp(cum_i - cum_j) masked to i >= j.  dA_cum: (..., L, H) -> (..., H, L, L).
+
+    The exponent is masked BEFORE the exp: the i < j entries are exp(+large)
+    = inf, and reverse-mode through `where` would turn the masked cotangent
+    into 0 * inf = NaN (the classic masked-softmax trap)."""
+    Lc = dA_cum.shape[-2]
+    diff = dA_cum[..., :, None, :] - dA_cum[..., None, :, :]   # (..., i, j, H)
+    diff = jnp.moveaxis(diff, -1, -3)                          # (..., H, i, j)
+    tril = jnp.tril(jnp.ones((Lc, Lc), bool))
+    diff = jnp.where(tril, diff, -jnp.inf)
+    return jnp.exp(diff)
+
+
+def ssd_chunked(x, dt, A, Bm, Cm, chunk: int, init_state=None,
+                return_final_state=False):
+    """SSD scan.  x: (B,S,H,P); dt: (B,S,H); A: (H,) (negative);
+    Bm, Cm: (B,S,G,N).  Returns y: (B,S,H,P) [, final_state (B,H,P,N)].
+    """
+    Bsz, S, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    rep = H // G
+    Lc = min(chunk, S)
+    nc = S // Lc
+    assert nc * Lc == S, "seq len must be divisible by chunk"
+
+    xc = x.reshape(Bsz, nc, Lc, H, P)
+    dtc = dt.reshape(Bsz, nc, Lc, H)
+    Bc = Bm.reshape(Bsz, nc, Lc, G, N)
+    Cc = Cm.reshape(Bsz, nc, Lc, G, N)
+
+    xdt = xc * dtc[..., None]                              # dt folded into x
+    dA = dtc * A                                           # (B,nc,L,H)
+    dA_cum = jnp.cumsum(dA, axis=2)
+
+    # --- intra-chunk (quadratic within chunk, matmul-rich) ---
+    CB = jnp.einsum("bmign,bmjgn->bmgij", Cc, Bc)          # (B,nc,G,L,L)
+    Mdecay = _segsum_decay(dA_cum)                         # (B,nc,H,L,L)
+    CB = jnp.repeat(CB, rep, axis=2)                       # G -> H
+    scores = CB * Mdecay
+    y_intra = jnp.einsum("bmhij,bmjhp->bmihp", scores, xdt)
+
+    # --- per-chunk states ---
+    decay_to_end = jnp.exp(dA_cum[:, :, -1:, :] - dA_cum)  # (B,nc,L,H)
+    Bh = jnp.repeat(Bc, rep, axis=3)                       # (B,nc,L,H,N)
+    states = jnp.einsum("bmlhn,bmlh,bmlhp->bmhpn",
+                        Bh, decay_to_end, xdt)             # (B,nc,H,P,N)
+
+    # --- inter-chunk recurrence ---
+    chunk_decay = jnp.exp(dA_cum[:, :, -1, :])             # (B,nc,H)
+    s0 = (jnp.zeros((Bsz, H, P, N), jnp.float32) if init_state is None
+          else init_state.astype(jnp.float32))
+
+    def step(s, inp):
+        st, dec = inp
+        prev = s
+        s = dec[:, :, None, None] * s + st.astype(jnp.float32)
+        return s, prev
+
+    final, prev_states = jax.lax.scan(
+        step, s0, (states.swapaxes(0, 1), chunk_decay.swapaxes(0, 1)))
+    prev_states = prev_states.swapaxes(0, 1)               # (B,nc,H,P,N)
+
+    Ch = jnp.repeat(Cc, rep, axis=3)                       # (B,nc,L,H,N)
+    y_inter = jnp.einsum("bmlhn,bmhpn,bmlh->bmlhp",
+                         Ch, prev_states.astype(x.dtype),
+                         jnp.exp(dA_cum).astype(x.dtype))
+    y = (y_intra + y_inter).reshape(Bsz, S, H, P)
+    if return_final_state:
+        return y, final
+    return y
+
+
+def ssm_forward(cfg, p, x, *, return_cache=False):
+    """Full-sequence Mamba2 block.  x: (B, S, D)."""
+    B, S, D = x.shape
+    H, P = cfg.ssm_nheads, cfg.ssm_head_dim
+    G, N = cfg.ssm_ngroups, cfg.ssm_state
+    din = cfg.d_inner
+
+    z, xBC_raw, dt = _project(cfg, p, x)
+    xBC = _causal_conv(cfg, xBC_raw, p["conv_w"], p["conv_b"])
+    xs = xBC[..., :din].reshape(B, S, H, P)
+    Bm = xBC[..., din:din + G * N].reshape(B, S, G, N)
+    Cm = xBC[..., din + G * N:].reshape(B, S, G, N)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+
+    out = ssd_chunked(xs, dt, A, Bm, Cm, cfg.ssm_chunk,
+                      return_final_state=return_cache)
+    if return_cache:
+        y, final_state = out
+    else:
+        y = out
+    y = y.astype(x.dtype) + xs * p["D"][:, None].astype(x.dtype)
+    y = y.reshape(B, S, din)
+    y = L.rmsnorm(y * jax.nn.silu(z), p["norm"])
+    y_out = (y @ p["out_proj"]).astype(x.dtype)
+    if return_cache:
+        # conv cache holds the *pre-activation* last kw-1 raw inputs
+        conv_state = xBC_raw[:, -(cfg.ssm_conv - 1):, :]
+        return y_out, (final_state, conv_state)
+    return y_out
+
+
+def ssm_decode(cfg, p, x, ssm_state, conv_state):
+    """One-token recurrent update.
+
+    x: (B, 1, D); ssm_state: (B, H, P, N) fp32; conv_state: (B, kw-1, Cd).
+    """
+    B = x.shape[0]
+    H, P = cfg.ssm_nheads, cfg.ssm_head_dim
+    G, N = cfg.ssm_ngroups, cfg.ssm_state
+    din = cfg.d_inner
+    kw = cfg.ssm_conv
+
+    z, xBC_new, dt = _project(cfg, p, x)
+    window = jnp.concatenate([conv_state, xBC_new], axis=1)   # (B, kw, Cd)
+    conv_state = window[:, 1:, :]
+    xBC = jnp.einsum("bkc,kc->bc", window, p["conv_w"]) + p["conv_b"]
+    xBC = jax.nn.silu(xBC)
+
+    xs = xBC[:, :din].reshape(B, H, P)
+    Bm = xBC[:, din:din + G * N].reshape(B, G, N)
+    Cm = xBC[:, din + G * N:].reshape(B, G, N)
+    rep = H // G
+    Bh = jnp.repeat(Bm, rep, axis=1)                          # (B,H,N)
+    Ch = jnp.repeat(Cm, rep, axis=1)
+
+    dt = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    A = -jnp.exp(p["A_log"])
+    dA = jnp.exp(dt * A)                                      # (B,H)
+
+    ssm_state = (dA[:, :, None, None] * ssm_state
+                 + jnp.einsum("bh,bhp,bhn->bhpn", dt,
+                              xs.astype(jnp.float32),
+                              Bh.astype(jnp.float32)))
+    y = jnp.einsum("bhpn,bhn->bhp", ssm_state, Ch.astype(jnp.float32))
+    y = y.astype(x.dtype) + xs * p["D"][:, None].astype(x.dtype)
+    y = y.reshape(B, 1, din)
+    y = L.rmsnorm(y * jax.nn.silu(z), p["norm"])
+    return (y @ p["out_proj"]).astype(x.dtype), ssm_state, conv_state

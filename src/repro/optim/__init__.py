@@ -1,0 +1,1 @@
+from repro.optim.adamw import AdamW, Sgd, cosine_schedule  # noqa: F401

@@ -1,0 +1,6 @@
+import os
+import sys
+
+# tests run on the single real CPU device (the 512-device forcing is ONLY
+# inside launch/dryrun.py, per the brief).
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

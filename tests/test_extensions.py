@@ -1,0 +1,69 @@
+"""Tests for the beyond-baseline extensions: 2PS partitioner, EASE-style
+selection, vertex reordering, Hysync auto-switching, push-mode training."""
+import numpy as np
+import pytest
+
+from repro.core import partitioning as P
+from repro.core import reordering as RO
+from repro.core.sync import HysyncController
+from repro.graph import generators as G
+
+
+@pytest.fixture(scope="module")
+def powerlaw():
+    return G.barabasi_albert(300, 3, seed=1)
+
+
+@pytest.fixture(scope="module")
+def er():
+    return G.erdos_renyi(250, 6.0, seed=2, directed=False)
+
+
+def test_2ps_partitioner_valid(powerlaw):
+    p = P.partition(powerlaw, 4, "2ps")
+    assert p.edge_assignment.shape == (powerlaw.num_edges,)
+    assert (p.edge_assignment >= 0).all() and (p.edge_assignment < 4).all()
+    assert p.balance() < 1.5
+    # 2PS's clustering should not be worse than plain HDRF by much, and
+    # both should beat the edge-cut replication factor on power-law graphs
+    rf = p.replication_factor(powerlaw)
+    rf_hash = P.partition(powerlaw, 4, "hash").replication_factor(powerlaw)
+    assert rf < rf_hash
+
+
+def test_ease_selector(powerlaw, er):
+    assert P.select_partitioner(powerlaw, 8) == "hdrf"   # heavy tail
+    assert P.select_partitioner(er, 8) == "ldg"          # uniform degrees
+    big = G.erdos_renyi(2000, 2.0, seed=0)
+    assert P.select_partitioner(big, 64,
+                                latency_budget_s=0.01) == "hash"
+
+
+def test_reordering_improves_locality(er):
+    base = RO.edge_locality(er, window=32)
+    perm = RO.bfs_locality_order(er)
+    g2 = RO.apply_order(er, perm)
+    better = RO.edge_locality(g2, window=32)
+    assert better > base
+    # relabeling preserves the graph (edge count, degree multiset)
+    assert g2.num_edges == er.num_edges
+    assert sorted(g2.out_degree().tolist()) == \
+        sorted(er.out_degree().tolist())
+
+
+def test_degree_sort_order_is_permutation(powerlaw):
+    perm = RO.degree_sort_order(powerlaw)
+    assert sorted(perm.tolist()) == list(range(powerlaw.num_nodes))
+    g2 = RO.apply_order(powerlaw, perm)
+    deg = g2.out_degree()
+    assert deg[0] == powerlaw.out_degree().max()
+
+
+def test_hysync_switches_to_bsp_when_converged():
+    ctl = HysyncController(stale_s=4, switch_threshold=0.1)
+    losses = [2.0, 1.0, 0.6, 0.4, 0.3, 0.28, 0.279, 0.2789, 0.2788]
+    modes = [ctl.observe(i, l) for i, l in enumerate(losses)]
+    assert modes[0] == "stale"
+    assert modes[-1] == "bsp"
+    assert ctl.switch_step is not None
+    assert ctl.staleness() == 1

@@ -1,0 +1,82 @@
+"""Per-kernel shape/dtype sweeps asserting allclose vs the ref.py oracles
+(interpret=True executes the kernel bodies on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.segment_sum import segment_sum_pallas
+from repro.kernels.ssd_chunk import ssd_chunk_state_pallas
+
+RNG = np.random.default_rng(42)
+
+
+def _tol(dtype):
+    return dict(atol=2e-2, rtol=2e-2) if dtype == jnp.bfloat16 else \
+        dict(atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("E,F,N", [(64, 32, 16), (300, 70, 45),
+                                   (1000, 128, 128), (17, 5, 3)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_segment_sum(E, F, N, dtype):
+    msgs = jnp.asarray(RNG.normal(size=(E, F)), dtype)
+    ids = jnp.asarray(RNG.integers(0, N, E), jnp.int32)
+    got = segment_sum_pallas(msgs, ids, N)
+    # the kernel accumulates in fp32 scratch; compare against the fp32
+    # ground truth with dtype-appropriate tolerance
+    want = ref.segment_sum(msgs.astype(jnp.float32), ids, N)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **_tol(dtype))
+
+
+def test_segment_sum_empty_segments():
+    msgs = jnp.ones((8, 4), jnp.float32)
+    ids = jnp.zeros((8,), jnp.int32)          # everything into segment 0
+    got = segment_sum_pallas(msgs, ids, 5)
+    assert float(got[0, 0]) == 8.0
+    assert float(jnp.abs(got[1:]).sum()) == 0.0
+
+
+@pytest.mark.parametrize("B,H,K,Sq,Skv,hd", [
+    (1, 2, 2, 32, 32, 16),
+    (2, 4, 2, 64, 64, 32),     # GQA G=2
+    (1, 8, 1, 48, 96, 64),     # MQA, decode-ish Sq<Skv, non-multiple of 32
+])
+@pytest.mark.parametrize("window", [0, 16])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention(B, H, K, Sq, Skv, hd, window, dtype):
+    q = jnp.asarray(RNG.normal(size=(B, H, Sq, hd)), dtype)
+    k = jnp.asarray(RNG.normal(size=(B, K, Skv, hd)), dtype)
+    v = jnp.asarray(RNG.normal(size=(B, K, Skv, hd)), dtype)
+    got = flash_attention_pallas(q, k, v, causal=True, window=window,
+                                 bq=32, bk=32)
+    want = ref.flash_attention(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **_tol(dtype))
+
+
+def test_flash_attention_non_causal():
+    q = jnp.asarray(RNG.normal(size=(1, 2, 32, 16)), jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(1, 2, 32, 16)), jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(1, 2, 32, 16)), jnp.float32)
+    got = flash_attention_pallas(q, k, v, causal=False, bq=16, bk=16)
+    want = ref.flash_attention(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5,
+                               rtol=2e-5)
+
+
+@pytest.mark.parametrize("B,L,H,P,G,N", [
+    (1, 16, 4, 8, 1, 16), (2, 32, 8, 16, 1, 24), (1, 64, 8, 32, 2, 64),
+])
+def test_ssd_chunk_state(B, L, H, P, G, N):
+    x = jnp.asarray(RNG.normal(size=(B, L, H, P)), jnp.float32)
+    dt = jnp.asarray(RNG.random((B, L, H)), jnp.float32)
+    A = -jnp.asarray(RNG.random(H) + 0.1, jnp.float32)
+    Bm = jnp.asarray(RNG.normal(size=(B, L, G, N)), jnp.float32)
+    got = ssd_chunk_state_pallas(x, dt, A, Bm, bh=min(4, H))
+    want = ref.ssd_chunk_state(x, dt, A, Bm)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-4,
+                               rtol=1e-4)

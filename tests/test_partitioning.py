@@ -1,0 +1,96 @@
+"""Partitioning invariants + survey-claim sanity (§3.2.1 / Table 3)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import partitioning as P
+from repro.graph import generators as G
+
+
+@pytest.fixture(scope="module")
+def powerlaw():
+    return G.barabasi_albert(400, 3, seed=1)
+
+
+@pytest.fixture(scope="module")
+def er():
+    return G.erdos_renyi(300, 6.0, seed=2, directed=False)
+
+
+EDGE_CUT = ["hash", "ldg", "fennel"]
+VERTEX_CUT = ["hdrf", "hybrid"]
+
+
+@pytest.mark.parametrize("method", EDGE_CUT)
+@pytest.mark.parametrize("n_parts", [2, 4, 8])
+def test_edge_cut_valid(powerlaw, method, n_parts):
+    p = P.partition(powerlaw, n_parts, method)
+    assert p.assignment.shape == (powerlaw.num_nodes,)
+    assert p.assignment.min() >= 0 and p.assignment.max() < n_parts
+    assert 0.0 <= p.edge_cut_fraction(powerlaw) <= 1.0
+    assert p.replication_factor(powerlaw) >= 1.0
+    # streaming partitioners should be reasonably balanced
+    if method in ("ldg", "fennel"):
+        assert p.balance() < 2.0
+
+
+@pytest.mark.parametrize("method", VERTEX_CUT)
+@pytest.mark.parametrize("n_parts", [2, 4])
+def test_vertex_cut_valid(powerlaw, method, n_parts):
+    p = P.partition(powerlaw, n_parts, method)
+    assert p.edge_assignment.shape == (powerlaw.num_edges,)
+    assert p.edge_assignment.min() >= 0
+    assert p.edge_assignment.max() < n_parts
+    assert p.replication_factor(powerlaw) >= 1.0
+
+
+def test_grid_partitioner(er):
+    p = P.partition(er, 4, "grid")
+    assert p.edge_assignment.max() < 4
+    # block id must equal (chunk(src), chunk(dst))
+    e = er.edges()
+    cu = e[:, 0] * 2 // er.num_nodes
+    cv = e[:, 1] * 2 // er.num_nodes
+    np.testing.assert_array_equal(p.edge_assignment, cu * 2 + cv)
+
+
+def test_ldg_cuts_fewer_edges_than_hash(er):
+    """LDG's locality heuristic must beat random hashing (survey §2.2.2)."""
+    cut_hash = P.partition(er, 4, "hash").edge_cut_fraction(er)
+    cut_ldg = P.partition(er, 4, "ldg").edge_cut_fraction(er)
+    assert cut_ldg < cut_hash
+
+
+def test_hdrf_beats_edge_cut_replication_on_powerlaw(powerlaw):
+    """PowerGraph/HDRF claim: vertex-cut lowers the replication factor on
+    skewed-degree graphs vs hash edge-cut (survey §3.2.1)."""
+    rf_vertex = P.partition(powerlaw, 4, "hdrf").replication_factor(powerlaw)
+    rf_edge = P.partition(powerlaw, 4, "hash").replication_factor(powerlaw)
+    assert rf_vertex < rf_edge
+
+
+def test_contiguousize_is_permutation(er):
+    p = P.partition(er, 4, "hash")
+    order, counts = P.contiguousize(er, p)
+    assert sorted(order.tolist()) == list(range(er.num_nodes))
+    assert counts.sum() == er.num_nodes
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(10, 120), n_parts=st.integers(2, 6),
+       seed=st.integers(0, 10))
+def test_property_every_vertex_assigned(n, n_parts, seed):
+    g = G.erdos_renyi(n, 4.0, seed=seed, directed=False)
+    for method in EDGE_CUT:
+        p = P.partition(g, n_parts, method)
+        assert len(p.assignment) == g.num_nodes
+        assert (p.assignment >= 0).all() and (p.assignment < n_parts).all()
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(20, 80), seed=st.integers(0, 5))
+def test_property_vertex_cut_assigns_every_edge(n, seed):
+    g = G.erdos_renyi(n, 4.0, seed=seed, directed=False)
+    p = P.partition(g, 4, "hdrf")
+    assert len(p.edge_assignment) == g.num_edges
+    assert (p.edge_assignment >= 0).all() and (p.edge_assignment < 4).all()

@@ -1,0 +1,128 @@
+"""Hypothesis property tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.abstraction import DeviceGraph
+from repro.graph import generators as G
+from repro.kernels import ref
+from repro.kernels.segment_sum import segment_sum_pallas
+from repro.models.transformer import layers as L
+
+
+# ---------------------------------------------------------------------------
+# segment_sum kernel algebraic invariants
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(e=st.integers(1, 200), f=st.integers(1, 40), n=st.integers(1, 50),
+       seed=st.integers(0, 100))
+def test_segment_sum_matches_oracle_random_shapes(e, f, n, seed):
+    rng = np.random.default_rng(seed)
+    msgs = jnp.asarray(rng.normal(size=(e, f)), jnp.float32)
+    ids = jnp.asarray(rng.integers(0, n, e), jnp.int32)
+    got = segment_sum_pallas(msgs, ids, n)
+    want = ref.segment_sum(msgs, ids, n)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-4, rtol=1e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 100))
+def test_segment_sum_linearity(seed):
+    rng = np.random.default_rng(seed)
+    a = jnp.asarray(rng.normal(size=(64, 8)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(64, 8)), jnp.float32)
+    ids = jnp.asarray(rng.integers(0, 10, 64), jnp.int32)
+    lhs = segment_sum_pallas(a + 2.0 * b, ids, 10)
+    rhs = (segment_sum_pallas(a, ids, 10)
+           + 2.0 * segment_sum_pallas(b, ids, 10))
+    np.testing.assert_allclose(np.asarray(lhs), np.asarray(rhs), atol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 50))
+def test_segment_sum_edge_permutation_invariance(seed):
+    rng = np.random.default_rng(seed)
+    msgs = jnp.asarray(rng.normal(size=(80, 6)), jnp.float32)
+    ids = jnp.asarray(rng.integers(0, 12, 80), jnp.int32)
+    perm = rng.permutation(80)
+    a = segment_sum_pallas(msgs, ids, 12)
+    b = segment_sum_pallas(msgs[perm], ids[perm], 12)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# attention invariants
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 50), sq=st.integers(2, 24))
+def test_causal_attention_prefix_property(seed, sq):
+    """Causal attention outputs for a prefix equal the prefix of outputs —
+    the invariant that makes KV-cache decode valid at all."""
+    rng = np.random.default_rng(seed)
+    B, H, hd = 1, 2, 16
+    S = 24
+    q = jnp.asarray(rng.normal(size=(B, S, H, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, S, H, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, S, H, hd)), jnp.float32)
+    full = L.attention(q, k, v, causal=True, q_offset=0)
+    pre = L.attention(q[:, :sq], k[:, :sq], v[:, :sq], causal=True,
+                      q_offset=0)
+    np.testing.assert_allclose(np.asarray(full[:, :sq]), np.asarray(pre),
+                               atol=1e-5, rtol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 50))
+def test_attention_rows_are_convex_combinations(seed):
+    """Each attention output lies in the convex hull of V rows: max |out|
+    <= max |v| per feature (softmax weights sum to 1)."""
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.normal(size=(1, 8, 2, 8)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, 8, 2, 8)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(1, 8, 2, 8)), jnp.float32)
+    out = np.asarray(L.attention(q, k, v, causal=True, q_offset=0))
+    assert np.all(out.max() <= np.asarray(v).max() + 1e-5)
+    assert np.all(out.min() >= np.asarray(v).min() - 1e-5)
+
+
+# ---------------------------------------------------------------------------
+# graph substrate invariants
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(10, 150), d=st.floats(1.0, 8.0),
+       seed=st.integers(0, 50))
+def test_degree_sum_equals_edges(n, d, seed):
+    g = G.erdos_renyi(n, d, seed=seed, directed=False)
+    assert g.out_degree().sum() == g.num_edges
+    assert g.in_degree().sum() == g.num_edges
+    # undirected: in == out
+    np.testing.assert_array_equal(g.in_degree(), g.out_degree())
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.integers(20, 100), seed=st.integers(0, 20))
+def test_subgraph_is_induced(n, seed):
+    g = G.erdos_renyi(n, 5.0, seed=seed, directed=False)
+    rng = np.random.default_rng(seed)
+    nodes = rng.choice(n, n // 2, replace=False)
+    sub = g.subgraph(nodes)
+    assert sub.num_nodes == len(nodes)
+    node_set = set(nodes.tolist())
+    e = g.edges()
+    expect = sum(1 for u, v in e if u in node_set and v in node_set)
+    assert sub.num_edges == expect
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 30))
+def test_device_graph_degrees_match(seed):
+    g = G.erdos_renyi(60, 4.0, seed=seed, directed=True)
+    dg = DeviceGraph.from_graph(g)
+    np.testing.assert_array_equal(
+        np.asarray(dg.in_deg), np.maximum(g.in_degree(), 1))

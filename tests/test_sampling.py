@@ -1,0 +1,94 @@
+"""Sampling invariants (§3.2.2 / Table 4): fanout bounds, block structure,
+neighborhood-explosion containment."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import sampling as S
+from repro.graph import generators as G
+
+
+@pytest.fixture(scope="module")
+def graph():
+    g = G.erdos_renyi(300, 8.0, seed=0, directed=False)
+    return G.featurize(g, 16, seed=0, num_classes=4)
+
+
+def _check_block_invariants(b: S.Block):
+    valid_src = b.src_nodes[b.src_nodes >= 0]
+    valid_dst = b.dst_nodes[b.dst_nodes >= 0]
+    # dst nodes are a prefix of src nodes
+    np.testing.assert_array_equal(b.src_nodes[:len(valid_dst)], valid_dst)
+    # masked edges index inside the valid ranges
+    es = b.edge_src[b.edge_mask]
+    ed = b.edge_dst[b.edge_mask]
+    assert (es < len(b.src_nodes)).all()
+    assert (ed < len(valid_dst)).all()
+
+
+def test_neighbor_sampler_fanout_bound(graph):
+    fanouts = [4, 4]
+    s = S.NeighborSampler(graph, fanouts, seed=0)
+    seeds = np.arange(16)
+    mb = s.sample(seeds)
+    assert len(mb.blocks) == 2
+    for b, f in zip(mb.blocks, reversed(fanouts)):
+        _check_block_invariants(b)
+    # neighborhood must not explode beyond seeds * prod(fanouts+1)
+    assert mb.blocks[0].num_src <= 16 * (1 + 4) * (1 + 4)
+    np.testing.assert_array_equal(mb.blocks[-1].dst_nodes, seeds)
+
+
+def test_importance_sampler(graph):
+    s = S.ImportanceSampler(graph, [3, 3], seed=0)
+    mb = s.sample(np.arange(8))
+    for b in mb.blocks:
+        _check_block_invariants(b)
+
+
+@pytest.mark.parametrize("dependent", [False, True])
+def test_layerwise_samplers(graph, dependent):
+    s = S.LayerWiseSampler(graph, [32, 32], dependent=dependent, seed=0)
+    mb = s.sample(np.arange(8))
+    for b in mb.blocks:
+        _check_block_invariants(b)
+        # layer budget respected
+        assert b.num_src <= 8 + 32 + b.num_dst
+
+
+def test_cluster_sampler_covers_all_nodes(graph):
+    cs = S.ClusterSampler(graph, n_clusters=8, clusters_per_batch=2, seed=0)
+    assert (cs.assign >= 0).all() and (cs.assign < 8).all()
+    nodes, sub = cs.sample_subgraph()
+    assert sub.num_nodes == len(nodes)
+    assert sub.num_classes == graph.num_classes
+
+
+def test_saint_rw_sampler(graph):
+    s = S.SaintRWSampler(graph, n_roots=10, walk_len=4, seed=0)
+    nodes, sub = s.sample_subgraph()
+    assert 10 <= sub.num_nodes <= 10 * 5
+    assert sub.features.shape[0] == sub.num_nodes
+
+
+def test_neighborhood_explosion_motivation(graph):
+    """Survey §3.2.2: unsampled k-hop neighborhoods explode; sampled ones
+    stay bounded."""
+    sizes = S.neighborhood_growth(graph, np.arange(4), hops=3)
+    s = S.NeighborSampler(graph, [4, 4, 4], seed=0)
+    mb = s.sample(np.arange(4))
+    sampled_input = int((mb.blocks[0].src_nodes >= 0).sum())
+    assert sizes[-1] > sampled_input  # sampling contains the explosion
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 100), batch=st.integers(1, 12))
+def test_property_blocks_are_consistent(graph, seed, batch):
+    s = S.NeighborSampler(graph, [3, 3], seed=seed)
+    rng = np.random.default_rng(seed)
+    seeds = rng.choice(graph.num_nodes, batch, replace=False)
+    mb = s.sample(seeds)
+    # features flow: every block's dst appears in next block's src prefix
+    np.testing.assert_array_equal(mb.blocks[-1].dst_nodes, seeds)
+    for b in mb.blocks:
+        _check_block_invariants(b)

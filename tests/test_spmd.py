@@ -1,0 +1,51 @@
+"""Multi-device integration tests (8 forced host devices in a subprocess —
+the in-process runtime already locked to 1 device)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run(script, timeout=600):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    env.pop("XLA_FLAGS", None)
+    return subprocess.run(
+        [sys.executable, os.path.join(ROOT, "tests", script)],
+        capture_output=True, text=True, timeout=timeout, env=env)
+
+
+@pytest.mark.slow
+def test_spmd_gnn_suite():
+    r = _run("spmd_gnn_check.py")
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "ALL SPMD CHECKS PASS" in r.stdout
+    assert "PASS pull-equivalence" in r.stdout
+    assert "PASS push-equivalence" in r.stdout
+    assert "PASS stale-mode" in r.stdout
+    assert "PASS p3-hybrid" in r.stdout
+    assert "PASS coordination" in r.stdout
+
+
+@pytest.mark.slow
+def test_spmd_moe_expert_parallel():
+    r = _run("spmd_moe_check.py")
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "ALL MOE SPMD CHECKS PASS" in r.stdout
+
+
+@pytest.mark.slow
+def test_dryrun_single_combo():
+    """The dry-run entry point itself (512 devices) on the smallest arch."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch",
+         "whisper-tiny", "--shape", "train_4k"],
+        capture_output=True, text=True, timeout=900, env=env, cwd=ROOT)
+    assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-2000:]
+    assert "1 ok, 0 skip, 0 fail" in r.stdout

@@ -1,0 +1,68 @@
+"""End-to-end behaviour tests for the framework."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import get_config
+from repro.data.pipeline import SyntheticLMDataset
+from repro.models.transformer import model as M
+from repro.optim import AdamW, cosine_schedule
+
+
+def test_lm_training_learns_planted_bigrams():
+    """A tiny dense LM trained on the synthetic corpus must beat the
+    unigram entropy floor (it can only do so by learning the planted
+    bigram table) — end-to-end proof the substrate trains."""
+    cfg = get_config("qwen2.5-14b").reduced().replace(
+        num_layers=2, d_model=128, num_heads=4, num_kv_heads=2, d_ff=256,
+        vocab_size=256)
+    ds = SyntheticLMDataset(cfg.vocab_size, 32, seed=0)
+    key = jax.random.PRNGKey(0)
+    params = M.init_params(cfg, key)
+    opt = AdamW(lr=cosine_schedule(3e-3, 10, 200), weight_decay=0.01)
+    ostate = opt.init(params)
+    step = jax.jit(M.make_train_step(cfg, opt, remat=False))
+    it = ds.batches(16)
+    losses = []
+    for _ in range(120):
+        b = next(it)
+        params, ostate, m = step(params, ostate,
+                                 {k: jnp.asarray(v) for k, v in b.items()})
+        losses.append(float(m["loss"]))
+    # unigram entropy of the Zipf distribution:
+    H_uni = -np.sum(ds.unigram * np.log(ds.unigram))
+    assert losses[-1] < losses[0]
+    assert np.mean(losses[-10:]) < 0.8 * H_uni, (losses[0], losses[-1], H_uni)
+
+
+def test_greedy_decode_roundtrip():
+    """prefill + iterated decode_step reproduces forward() argmax chain."""
+    cfg = get_config("phi3-mini-3.8b").reduced()
+    key = jax.random.PRNGKey(0)
+    params = M.init_params(cfg, key)
+    B, S, GEN = 2, 12, 4
+    tokens = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+
+    # reference: grow the sequence with forward() argmax
+    seq = tokens
+    for _ in range(GEN):
+        lg = M.forward(cfg, params, {"tokens": seq})
+        nxt = jnp.argmax(lg[:, -1, :cfg.vocab_size], -1)[:, None]
+        seq = jnp.concatenate([seq, nxt], axis=1)
+
+    # serving path: prefill + decode with a pre-sized cache
+    cache = M.init_cache(cfg, B, S + GEN)
+    lg, _ = M.prefill(cfg, params, {"tokens": tokens})
+    # re-run prefill writes into the right-sized cache via decode steps
+    cache = M.init_cache(cfg, B, S + GEN)
+    out = []
+    for t in range(S + GEN - 1):
+        tok = seq[:, t:t + 1]
+        lg, cache = M.decode_step(cfg, params, cache,
+                                  {"token": tok,
+                                   "pos": jnp.asarray(t, jnp.int32)})
+        out.append(jnp.argmax(lg[:, :cfg.vocab_size], -1))
+    # decode chain must predict the same continuation tokens
+    for i in range(GEN):
+        np.testing.assert_array_equal(np.asarray(out[S - 1 + i]),
+                                      np.asarray(seq[:, S + i]))

@@ -1,0 +1,295 @@
+"""Transformer substrate unit tests: attention equivalences, RoPE
+properties, MoE dispatch equivalence, SSD vs naive recurrence, decode
+consistency per family."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ARCH_IDS, get_config
+from repro.models.transformer import attention as A
+from repro.models.transformer import layers as L
+from repro.models.transformer import model as M
+from repro.models.transformer import moe as MoE
+from repro.models.transformer import ssm as S
+
+RNG = np.random.default_rng(7)
+
+
+# ---------------------------------------------------------------------------
+# chunked attention == dense reference
+# ---------------------------------------------------------------------------
+
+def _dense_attn(q, k, v, causal, window=0, q_offset=0):
+    B, Sq, H, hd = q.shape
+    K = k.shape[2]
+    G = H // K
+    qg = q.reshape(B, Sq, K, G, hd).astype(jnp.float32) / np.sqrt(hd)
+    logits = jnp.einsum("bqkgh,bskh->bkgqs", qg, k.astype(jnp.float32))
+    qpos = q_offset + jnp.arange(Sq)[:, None]
+    kpos = jnp.arange(k.shape[1])[None, :]
+    mask = jnp.ones((Sq, k.shape[1]), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window:
+        mask &= kpos > qpos - window
+    logits = jnp.where(mask[None, None, None], logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", w, v.astype(jnp.float32))
+    return out.reshape(B, Sq, H, hd)
+
+
+@pytest.mark.parametrize("q_chunk", [8, 16, 1024])
+@pytest.mark.parametrize("window", [0, 8])
+def test_attention_chunking_equivalence(q_chunk, window):
+    B, S, H, K, hd = 2, 48, 4, 2, 16
+    q = jnp.asarray(RNG.normal(size=(B, S, H, hd)), jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(B, S, K, hd)), jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(B, S, K, hd)), jnp.float32)
+    got = L.attention(q, k, v, causal=True, q_offset=0, window=window,
+                      q_chunk=q_chunk)
+    want = _dense_attn(q, k, v, True, window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want, np.float32),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_rope_preserves_norm_and_relativity():
+    hd, S = 32, 16
+    x = jnp.asarray(RNG.normal(size=(1, S, 2, hd)), jnp.float32)
+    pos = jnp.arange(S)[None]
+    y = L.apply_rope(x, pos, 10_000.0)
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(y), axis=-1),
+        np.linalg.norm(np.asarray(x), axis=-1), rtol=1e-5)
+    # relative property: <R(p)q, R(p+d)k> independent of p
+    q = jnp.asarray(RNG.normal(size=(1, 1, 1, hd)), jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(1, 1, 1, hd)), jnp.float32)
+    dots = []
+    for p in (0, 5, 11):
+        qr = L.apply_rope(q, jnp.asarray([[p]]), 10_000.0)
+        kr = L.apply_rope(k, jnp.asarray([[p + 3]]), 10_000.0)
+        dots.append(float(jnp.sum(qr * kr)))
+    assert abs(dots[0] - dots[1]) < 1e-4 and abs(dots[0] - dots[2]) < 1e-4
+
+
+def test_mrope_sections_match_standard_when_positions_equal():
+    cfg = get_config("qwen2-vl-7b").reduced()
+    hd = cfg.resolved_head_dim
+    x = jnp.asarray(RNG.normal(size=(2, 8, 2, hd)), jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(8)[None], (2, 8))
+    pos3 = jnp.broadcast_to(pos[None], (3, 2, 8))
+    y_m = L.apply_rope(x, pos3, cfg.rope_theta,
+                       mrope_sections=cfg.mrope_sections)
+    y_s = L.apply_rope(x, pos, cfg.rope_theta)
+    np.testing.assert_allclose(np.asarray(y_m), np.asarray(y_s), atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# MoE: GShard dense dispatch == gather dispatch
+# ---------------------------------------------------------------------------
+
+def test_moe_dispatch_equivalence():
+    cfg = get_config("granite-moe-1b-a400m").reduced()
+    key = jax.random.PRNGKey(0)
+    p = MoE.init_moe(cfg, key, jnp.float32)
+    x = jnp.asarray(RNG.normal(size=(2, 16, cfg.d_model)), jnp.float32)
+    # generous capacity so neither path drops tokens
+    y1 = MoE.moe_block(cfg, p, x, capacity_factor=8.0, group_size=32)
+    y2 = MoE.moe_block_gathered(cfg, p, x, capacity_factor=8.0)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-4,
+                               rtol=1e-4)
+
+
+def test_moe_capacity_drops_tokens():
+    cfg = get_config("granite-moe-1b-a400m").reduced()
+    p = MoE.init_moe(cfg, jax.random.PRNGKey(0), jnp.float32)
+    x = jnp.asarray(RNG.normal(size=(1, 32, cfg.d_model)), jnp.float32)
+    y_tight = MoE.moe_block(cfg, p, x, capacity_factor=0.25)
+    y_loose = MoE.moe_block(cfg, p, x, capacity_factor=8.0)
+    assert float(jnp.max(jnp.abs(y_tight - y_loose))) > 1e-6
+
+
+# ---------------------------------------------------------------------------
+# SSD == naive recurrence
+# ---------------------------------------------------------------------------
+
+def _naive_ssd(x, dt, A, Bm, Cm):
+    B, S, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    rep = H // G
+    Bh = np.repeat(np.asarray(Bm), rep, axis=2)
+    Ch = np.repeat(np.asarray(Cm), rep, axis=2)
+    xn, dtn = np.asarray(x), np.asarray(dt)
+    An = np.asarray(A)
+    h = np.zeros((B, H, P, N))
+    ys = np.zeros((B, S, H, P))
+    for t in range(S):
+        dA = np.exp(dtn[:, t] * An)                       # (B,H)
+        h = dA[:, :, None, None] * h + np.einsum(
+            "bh,bhp,bhn->bhpn", dtn[:, t], xn[:, t], Bh[:, t])
+        ys[:, t] = np.einsum("bhpn,bhn->bhp", h, Ch[:, t])
+    return ys, h
+
+
+@pytest.mark.parametrize("chunk", [4, 8, 32])
+def test_ssd_chunked_matches_recurrence(chunk):
+    B, S, H, P, G, N = 2, 32, 4, 8, 1, 16
+    x = jnp.asarray(RNG.normal(size=(B, S, H, P)), jnp.float32)
+    dt = jnp.asarray(RNG.random((B, S, H)) * 0.5, jnp.float32)
+    A = -jnp.asarray(RNG.random(H) + 0.2, jnp.float32)
+    Bm = jnp.asarray(RNG.normal(size=(B, S, G, N)), jnp.float32)
+    Cm = jnp.asarray(RNG.normal(size=(B, S, G, N)), jnp.float32)
+    y, hfin = S_ssd(x, dt, A, Bm, Cm, chunk)
+    y_ref, h_ref = _naive_ssd(x, dt, A, Bm, Cm)
+    np.testing.assert_allclose(np.asarray(y), y_ref, atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(hfin), h_ref, atol=1e-4, rtol=1e-4)
+
+
+def S_ssd(x, dt, A, Bm, Cm, chunk):
+    return S.ssd_chunked(x, dt, A, Bm, Cm, chunk, return_final_state=True)
+
+
+# ---------------------------------------------------------------------------
+# decode == forward (incremental consistency) per family
+# ---------------------------------------------------------------------------
+
+def _concrete_batch(cfg, B, S, key):
+    fam = cfg.family
+    if fam == "vlm":
+        return {"embeds": jax.random.normal(key, (B, S, cfg.d_model),
+                                            jnp.float32),
+                "positions": jnp.broadcast_to(
+                    jnp.arange(S)[None, None], (3, B, S)).astype(jnp.int32)}
+    if fam == "encdec":
+        return {"enc_embeds": jax.random.normal(key, (B, S, cfg.d_model),
+                                                jnp.float32),
+                "tokens": jax.random.randint(key, (B, S), 0, cfg.vocab_size)}
+    return {"tokens": jax.random.randint(key, (B, S), 0, cfg.vocab_size)}
+
+
+@pytest.mark.parametrize("arch", ["qwen2.5-14b", "glm4-9b", "gemma-7b",
+                                  "granite-moe-1b-a400m", "mamba2-780m",
+                                  "zamba2-2.7b", "whisper-tiny",
+                                  "deepseek-v3-671b", "qwen2-vl-7b"])
+def test_decode_matches_forward(arch):
+    cfg = get_config(arch).reduced()
+    if cfg.num_experts:
+        # avoid capacity-drop divergence between the two paths
+        pass
+    key = jax.random.PRNGKey(1)
+    B, S = 2, 16
+    params = M.init_params(cfg, key, max_seq=S + 1)
+    batch = _concrete_batch(cfg, B, S, key)
+
+    logits_full = M.forward(cfg, params, batch)           # (B, S, V)
+
+    prefix = {k: (v[..., :S - 1, :] if v.ndim == 3 and k != "positions"
+                  else v[..., :S - 1] if k in ("tokens",)
+                  else v[:, :, :S - 1] if k == "positions"
+                  else v)
+              for k, v in batch.items()}
+    if cfg.family == "encdec":
+        prefix["enc_embeds"] = batch["enc_embeds"]        # full audio ctx
+    lg_prefill, cache = M.prefill(cfg, params, prefix)
+
+    np.testing.assert_allclose(np.asarray(lg_prefill),
+                               np.asarray(logits_full[:, S - 2]),
+                               atol=2e-3, rtol=2e-3)
+
+    db = {"pos": jnp.asarray(S - 1, jnp.int32)}
+    if cfg.family == "vlm":
+        db["embeds"] = batch["embeds"][:, S - 1:]
+    else:
+        db["token"] = batch["tokens"][:, S - 1:]
+
+    if cfg.family in ("dense", "vlm", "moe", "mla_moe", "encdec", "hybrid"):
+        # grow kv caches by one slot along the cache-sequence axis (axis 2)
+        def pad_seq(a):
+            pads = [(0, 0)] * a.ndim
+            pads[2] = (0, 1)
+            return jnp.pad(a, pads)
+
+        def pad_kv(tree):
+            out = {}
+            for k_, v_ in tree.items():
+                if k_ == "cross":           # encoder context: fixed length
+                    out[k_] = v_
+                elif isinstance(v_, dict):
+                    out[k_] = pad_kv(v_)
+                elif k_ in ("k", "v", "c", "kr"):
+                    out[k_] = pad_seq(v_)
+                else:
+                    out[k_] = v_
+            return out
+
+        cache = pad_kv(cache)
+
+    logits_dec, _ = M.decode_step(cfg, params, cache, db)
+    np.testing.assert_allclose(np.asarray(logits_dec),
+                               np.asarray(logits_full[:, S - 1]),
+                               atol=2e-3, rtol=2e-3)
+
+
+def test_mla_decode_matches_mla_forward():
+    cfg = get_config("deepseek-v3-671b").reduced()
+    key = jax.random.PRNGKey(3)
+    p = A.init_mla(cfg, key, jnp.float32)
+    B, S = 2, 12
+    x = jax.random.normal(key, (B, S, cfg.d_model), jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    out_full, (c_n, kr) = A.mla_forward(cfg, p, x, pos, return_cache=True)
+
+    cache_c = jnp.pad(c_n[:, :S - 1], ((0, 0), (0, 1), (0, 0)))
+    cache_kr = jnp.pad(kr[:, :S - 1], ((0, 0), (0, 1), (0, 0)))
+    out_dec, _, _ = A.mla_decode(cfg, p, x[:, S - 1:], cache_c, cache_kr,
+                                 jnp.asarray(S - 1))
+    np.testing.assert_allclose(np.asarray(out_dec[:, 0]),
+                               np.asarray(out_full[:, -1]), atol=1e-3,
+                               rtol=1e-3)
+
+
+def test_fp8_kv_cache_decode_close_to_bf16():
+    """FP8 KV cache (beyond-paper decode optimization) stays close to the
+    full-precision decode — and the cache pytree is genuinely fp8."""
+    cfg = get_config("qwen2.5-14b").reduced()
+    key = jax.random.PRNGKey(7)
+    B, S = 2, 16
+    params = M.init_params(cfg, key)
+    tokens = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    logits_full = M.forward(cfg, params, {"tokens": tokens})
+
+    cfg8 = cfg.replace(cache_dtype="float8_e4m3fn")
+    _, cache = M.prefill(cfg8, params, {"tokens": tokens[:, :S - 1]})
+    assert cache["k"].dtype == jnp.float8_e4m3fn
+    cache = jax.tree.map(
+        lambda a: jnp.pad(a, [(0, 0), (0, 0), (0, 1), (0, 0), (0, 0)]),
+        cache)
+    lg, _ = M.decode_step(cfg8, params, cache,
+                          {"token": tokens[:, S - 1:],
+                           "pos": jnp.asarray(S - 1, jnp.int32)})
+    ref_probs = jax.nn.softmax(logits_full[:, S - 1], -1)
+    fp8_probs = jax.nn.softmax(lg, -1)
+    # distributional agreement (fp8 quantization noise is bounded)
+    tv = 0.5 * float(jnp.abs(ref_probs - fp8_probs).sum(-1).max())
+    assert tv < 0.15, tv
+
+
+def test_sliding_window_ring_cache_decode():
+    cfg = get_config("qwen2.5-14b").reduced().replace(sliding_window=8)
+    key = jax.random.PRNGKey(5)
+    B, S = 1, 24
+    params = M.init_params(cfg, key)
+    tokens = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    logits_full = M.forward(cfg, params, {"tokens": tokens},
+                            window=cfg.sliding_window)
+
+    lg, cache = M.prefill(cfg, params, {"tokens": tokens[:, :S - 1]})
+    np.testing.assert_allclose(np.asarray(lg),
+                               np.asarray(logits_full[:, S - 2]), atol=2e-3,
+                               rtol=2e-3)
+    logits_dec, _ = M.decode_step(
+        cfg, params, cache,
+        {"token": tokens[:, S - 1:], "pos": jnp.asarray(S - 1, jnp.int32)})
+    np.testing.assert_allclose(np.asarray(logits_dec),
+                               np.asarray(logits_full[:, S - 1]), atol=2e-3,
+                               rtol=2e-3)
