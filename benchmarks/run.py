@@ -12,6 +12,7 @@ Prints ``name,us_per_call,derived`` CSV.  Module map:
   bench_performance   — §3.2.12 system-lineage comparison
   bench_kernels       — Pallas kernels vs oracles
   bench_roofline      — deliverable (g): roofline terms from the dry-run
+  bench_serving       — online inference: cache hierarchy vs no-cache
 """
 import sys
 import traceback
@@ -19,7 +20,7 @@ import traceback
 from benchmarks import (bench_abstraction, bench_caching, bench_datasets,
                         bench_distributed, bench_kernels, bench_partitioning,
                         bench_performance, bench_roofline, bench_sampling,
-                        bench_scheduling)
+                        bench_scheduling, bench_serving)
 
 MODULES = [
     ("partitioning", bench_partitioning),
@@ -32,6 +33,7 @@ MODULES = [
     ("kernels", bench_kernels),
     ("distributed", bench_distributed),
     ("roofline", bench_roofline),
+    ("serving", bench_serving),
 ]
 
 

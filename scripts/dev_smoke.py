@@ -11,6 +11,8 @@ from repro.models.transformer import model as M
 from repro.optim import AdamW
 
 ONLY = sys.argv[1:] if len(sys.argv) > 1 else None
+RUN_SERVING = ONLY is None or "serve_gnn" in ONLY
+ARCHES = [a for a in (ONLY or ARCH_IDS) if a != "serve_gnn"]
 
 
 def concrete_batch(cfg, B, S, kind, key):
@@ -44,7 +46,7 @@ def concrete_batch(cfg, B, S, kind, key):
     return batch
 
 
-for arch in (ONLY or ARCH_IDS):
+for arch in ARCHES:
     cfg = get_config(arch).reduced()
     key = jax.random.PRNGKey(0)
     B, S = 2, 32
@@ -78,4 +80,30 @@ for arch in (ONLY or ARCH_IDS):
     assert lg2.shape == (B, cfg.padded_vocab)
     assert not np.any(np.isnan(np.asarray(lg2, np.float32))), "NaN decode"
     print(f"OK {arch:24s} params={n:9d} loss={loss:.3f}")
+
+if RUN_SERVING:
+    # online GNN serving path: tiny graph, 32 requests, must report
+    # nonzero throughput and a cache hit rate
+    from repro.graph import generators as G
+    from repro.models.gnn import model as GM
+    from repro.models.gnn.model import GNNConfig
+    from repro.serving import GNNInferenceServer, poisson_workload
+
+    g = G.featurize(G.sbm(128, 4, p_in=0.9, p_out=0.02, seed=0), 16,
+                    seed=0, class_sep=1.5)
+    scfg = GNNConfig(arch="sage", feat_dim=16, hidden=32,
+                     num_classes=g.num_classes)
+    srv = GNNInferenceServer(
+        g, scfg, GM.init_gnn(scfg, jax.random.PRNGKey(0)),
+        fanouts=(3, 3), buckets=(1, 4, 8), cache_policy="degree",
+        cache_capacity=g.num_nodes // 4, seed=0)
+    srv.warmup()
+    srv.run(poisson_workload(32, np.arange(g.num_nodes), 2000.0, seed=1))
+    s = srv.summary()
+    assert s["served"] == 32, s
+    assert s["throughput_rps"] > 0, s
+    assert 0.0 <= s["embedding_hit_ratio"] <= 1.0, s
+    assert s["jit_entries"] <= len(srv.batcher.buckets), s
+    print(f"OK {'serve_gnn':24s} rps={s['throughput_rps']:.0f} "
+          f"p99={s['p99_ms']:.2f}ms hit={s['embedding_hit_ratio']:.2%}")
 print("ALL OK")

@@ -45,6 +45,24 @@ class FeatureStore:
         self.misses += int((~hit).sum())
         return self.g.features[ids] if self.g.features is not None else ids
 
+    def fetch_masked(self, ids: np.ndarray, needed: np.ndarray) -> np.ndarray:
+        """Slot-aligned fetch for padded serving batches: ``ids`` may
+        contain -1 pads and ``needed`` marks the slots whose features are
+        actually required (the rest return zero rows, keeping the batch
+        shape static).  Only needed rows count toward traffic."""
+        ids = np.asarray(ids)
+        needed = np.asarray(needed, bool) & (ids >= 0)
+        safe = np.maximum(ids, 0)
+        hit = self.cached[safe] & needed
+        self.hits += int(hit.sum())
+        self.misses += int((needed & ~hit).sum())
+        if self.g.features is None:
+            return safe
+        out = np.zeros((len(ids), self.g.features.shape[1]),
+                       self.g.features.dtype)
+        out[needed] = self.g.features[safe[needed]]
+        return out
+
     @property
     def hit_ratio(self) -> float:
         tot = self.hits + self.misses

@@ -31,7 +31,6 @@ def parameter_server_update(optimizer, params, grads, opt_state):
     gather-to-root traffic), root computes the update, broadcast via
     masked psum (the broadcast traffic)."""
     idx = jax.lax.axis_index(AXIS)
-    n = jax.lax.axis_size(AXIS)
 
     # gather: root receives every worker's gradient (others' copies are the
     # emulation artifact of SPMD — traffic matches PS ingest)

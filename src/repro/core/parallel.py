@@ -127,7 +127,6 @@ def _local_expert_compute(cfg, x_loc, router, w_gate, w_in, w_out,
     E = cfg.num_experts
     k = cfg.experts_per_token
     m_idx = jax.lax.axis_index("model")
-    msize = jax.lax.axis_size("model")
     E_loc = w_in.shape[0]
     T = x_loc.shape[0]
     C = max(1, int(np.ceil(T * k / E * capacity_factor)))

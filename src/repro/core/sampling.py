@@ -85,6 +85,50 @@ def _build_block(g: Graph, dst: np.ndarray, src_extra: np.ndarray,
     )
 
 
+def sample_block_padded(g: Graph, gr: Graph, dst: np.ndarray, fanout: int,
+                        rng_for, *, expand: np.ndarray = None) -> Block:
+    """One fixed-shape layer expansion (the serving-path primitive).
+
+    Unlike the training samplers above, ``dst`` here is a PADDED id array
+    (-1 marks an empty slot) and the emitted block's shapes depend only on
+    ``(len(dst), fanout)``: src_cap = D*(1+fanout), edge_cap = D*fanout.
+    Every batch drawn from the same bucket therefore hits the same jit
+    cache entry.
+
+    ``rng_for(node)`` must return a Generator for that node so a node's
+    sampled neighborhood is stable across requests (cache consistency).
+    ``expand`` (bool, aligned with ``dst``) restricts which dst nodes get
+    edges — serving skips expansion for embedding-cache hits.
+    """
+    dst = np.asarray(dst, np.int64)
+    dcap = len(dst)
+    valid = dst >= 0
+    real = dst[valid]
+    if len(np.unique(real)) != len(real):
+        # _build_block's slot lookup maps each id to ONE slot; duplicate
+        # dst ids would leave the other slots silently edge-less
+        raise ValueError("padded dst ids must be unique (dedup upstream)")
+    if expand is not None:
+        valid = valid & expand
+    edges, srcs = [], []
+    for d in dst[valid]:
+        nbr = gr.neighbors(int(d))
+        if len(nbr) == 0:
+            continue
+        rng = rng_for(int(d))
+        pick = nbr if len(nbr) <= fanout else rng.choice(
+            nbr, fanout, replace=False)
+        for s in pick:
+            edges.append((int(s), int(d)))
+        srcs.append(np.asarray(pick, np.int64))
+    src_extra = (np.unique(np.concatenate(srcs))
+                 if srcs else np.zeros(0, np.int64))
+    return _build_block(
+        g, dst, src_extra,
+        np.asarray(edges, np.int64).reshape(-1, 2),
+        dcap * (1 + fanout), dcap * fanout)
+
+
 # ===========================================================================
 # neighbor sampling (GraphSAGE)
 # ===========================================================================

@@ -186,12 +186,21 @@ def _variant_cfgs(cfg):
     return stacks, variants
 
 
+def _cost_dict(compiled) -> dict:
+    """``Compiled.cost_analysis()`` returns a dict on newer jax and a
+    one-element list of dicts on older releases — normalize to a dict."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return cost or {}
+
+
 def _measure(cfg, shape, mesh, **bl_kwargs) -> dict:
     fn, args, in_sh, out_sh = build_lowerable(cfg, shape, mesh, **bl_kwargs)
     with mesh:
         compiled = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh
                            ).lower(*args).compile()
-    cost = compiled.cost_analysis()
+    cost = _cost_dict(compiled)
     coll = collective_bytes(compiled.as_text())
     out = {"flops": float(cost.get("flops", 0.0)),
            "hbm_bytes": float(cost.get("bytes accessed", 0.0))}
@@ -281,7 +290,7 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool,
         t_compile = time.time() - t0
 
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis()
+    cost = _cost_dict(compiled)
     hlo = compiled.as_text()
     if save_hlo:
         with open(save_hlo, "w") as f:

@@ -1,0 +1,135 @@
+"""Online GNN inference serving driver.
+
+Serves per-node prediction requests against a synthetic (or named) graph
+through the ``repro.serving`` stack: Poisson/Zipf workload → bucketed
+micro-batching → fixed-shape neighbor sampling → historical-embedding +
+feature caching → jitted forward.  Runs the same workload twice (no-cache
+baseline, then the layered cache) and reports the traffic saved.
+
+  PYTHONPATH=src python -m repro.launch.serve_gnn --nodes 512 \
+      --requests 256 --arch sage
+  PYTHONPATH=src python -m repro.launch.serve_gnn --dataset reddit-like \
+      --requests 512 --cache degree --staleness 2
+"""
+from __future__ import annotations
+
+import argparse
+import copy
+import sys
+
+
+def parse_args(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--nodes", type=int, default=512)
+    ap.add_argument("--classes", type=int, default=4)
+    ap.add_argument("--feat-dim", type=int, default=32)
+    ap.add_argument("--hidden", type=int, default=64)
+    ap.add_argument("--arch", default="sage",
+                    choices=["gcn", "sage", "gat", "gin", "ggnn"])
+    ap.add_argument("--dataset", default="",
+                    help="named dataset from repro.graph.datasets; "
+                         "default: SBM sized by --nodes")
+    ap.add_argument("--requests", type=int, default=256)
+    ap.add_argument("--rate", type=float, default=2000.0,
+                    help="offered load, requests/s (virtual clock)")
+    ap.add_argument("--fanouts", type=int, nargs="+", default=[5, 5])
+    ap.add_argument("--buckets", type=int, nargs="+", default=[1, 4, 16, 64])
+    ap.add_argument("--max-wait-ms", type=float, default=2.0)
+    ap.add_argument("--cache", default="degree",
+                    choices=["none", "degree", "importance", "random"])
+    ap.add_argument("--cache-frac", type=float, default=0.2,
+                    help="fraction of nodes admitted to the caches")
+    ap.add_argument("--staleness", type=int, default=0,
+                    help="max staleness (version-clock ticks) served")
+    ap.add_argument("--use-kernel", action="store_true",
+                    help="Pallas segment-sum for the Gather step")
+    ap.add_argument("--train-epochs", type=int, default=0,
+                    help="optionally pre-train the model full-graph")
+    ap.add_argument("--seed", type=int, default=0)
+    return ap.parse_args(argv)
+
+
+def main(argv=None):
+    args = parse_args(argv)
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.graph import generators as G
+    from repro.models.gnn import model as GM
+    from repro.models.gnn.model import GNNConfig
+    from repro.serving import GNNInferenceServer, poisson_workload
+
+    if args.dataset:
+        from repro.graph.datasets import load
+        g = load(args.dataset, seed=args.seed).graph
+        feat_dim = g.features.shape[1]
+    else:
+        g = G.sbm(args.nodes, args.classes, p_in=0.9, p_out=0.02,
+                  seed=args.seed)
+        g = G.featurize(g, args.feat_dim, seed=args.seed, class_sep=1.5)
+        feat_dim = args.feat_dim
+    print(f"graph: {g.num_nodes} nodes, {g.num_edges} edges, "
+          f"{g.num_classes} classes")
+
+    cfg = GNNConfig(arch=args.arch, feat_dim=feat_dim, hidden=args.hidden,
+                    num_classes=g.num_classes,
+                    num_layers=len(args.fanouts),
+                    use_kernel=args.use_kernel)
+    params = GM.init_gnn(cfg, jax.random.PRNGKey(args.seed))
+
+    if args.train_epochs:
+        from repro.core.abstraction import DeviceGraph
+        from repro.optim import AdamW
+        opt = AdamW(lr=1e-2, weight_decay=0.0)
+        ostate = opt.init(params)
+        dg = DeviceGraph.from_graph(g)
+        x = jnp.asarray(g.features)
+        y = jnp.asarray(g.labels)
+        mask = jnp.ones_like(y, jnp.float32)
+        step = jax.jit(GM.make_fullgraph_train_step(cfg, opt))
+        for _ in range(args.train_epochs):
+            params, ostate, loss = step(params, ostate, dg, x, y, mask)
+        print(f"pre-trained {args.train_epochs} epochs, "
+              f"loss {float(loss):.4f}")
+
+    workload = poisson_workload(args.requests, np.arange(g.num_nodes),
+                                args.rate, seed=args.seed + 1)
+    capacity = int(g.num_nodes * args.cache_frac)
+
+    def serve(policy: str) -> dict:
+        srv = GNNInferenceServer(
+            g, cfg, params, fanouts=args.fanouts, buckets=args.buckets,
+            cache_policy=policy, cache_capacity=capacity,
+            max_staleness=args.staleness,
+            max_wait_s=args.max_wait_ms / 1e3, seed=args.seed)
+        srv.warmup()
+        srv.run(copy.deepcopy(workload))
+        return srv.summary()
+
+    base = serve("none")
+    print(f"[no-cache ] {base['throughput_rps']:8.1f} req/s  "
+          f"p50 {base['p50_ms']:6.2f} ms  p99 {base['p99_ms']:6.2f} ms  "
+          f"feature bytes {base['feature_bytes'] / 2**20:.2f} MiB")
+
+    if args.cache == "none":
+        print("done (cache disabled)")
+        return base
+
+    res = serve(args.cache)
+    saved = base["feature_bytes"] - res["feature_bytes"]
+    print(f"[{args.cache:9s}] {res['throughput_rps']:8.1f} req/s  "
+          f"p50 {res['p50_ms']:6.2f} ms  p99 {res['p99_ms']:6.2f} ms  "
+          f"feature bytes {res['feature_bytes'] / 2**20:.2f} MiB")
+    print(f"embedding hit rate {res['embedding_hit_ratio']:.2%}  "
+          f"feature hit rate {res['feature_hit_ratio']:.2%}  "
+          f"pad overhead {res['pad_overhead']:.2%}  "
+          f"jit entries {res['jit_entries']}")
+    print(f"bytes saved vs no-cache: {saved / 2**20:.2f} MiB "
+          f"({saved / max(base['feature_bytes'], 1):.1%})")
+    return res
+
+
+if __name__ == "__main__":
+    sys.exit(0 if main() is not None else 1)

@@ -87,6 +87,30 @@ def forward_blocks(cfg: GNNConfig, params, blocks: Sequence[DeviceGraph],
     return h
 
 
+def forward_blocks_cached(cfg: GNNConfig, params,
+                          inner_blocks: Sequence[DeviceGraph],
+                          outer_block: DeviceGraph, x_input,
+                          cached_h, fresh_mask):
+    """Serving forward with historical-embedding splice (GNNAutoScale).
+
+    Computes the first ``L-1`` layers over the (possibly miss-restricted)
+    inner blocks, then replaces rows of the final-layer input with cached
+    historical embeddings where ``fresh_mask`` holds, and applies the last
+    layer over ``outer_block``.  Returns ``(logits, h_fresh)`` where
+    ``h_fresh`` is the pre-splice hidden state — the rows to write back for
+    cache misses.  Shapes are static per (bucket, fanouts), so each bucket
+    compiles once."""
+    layer = _make_layer(cfg)
+    h = x_input
+    for i in range(len(params) - 1):
+        h = layer(params[i], inner_blocks[i], h, use_kernel=cfg.use_kernel)
+        h = jax.nn.relu(h)
+    h_fresh = h
+    h = jnp.where(fresh_mask[:, None], cached_h, h_fresh)
+    logits = layer(params[-1], outer_block, h, use_kernel=cfg.use_kernel)
+    return logits, h_fresh
+
+
 def nll_loss(logits, labels, mask=None):
     logz = jax.nn.logsumexp(logits, axis=-1)
     gold = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]

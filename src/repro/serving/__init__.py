@@ -1,0 +1,31 @@
+"""Online GNN inference serving (survey §3.2.2 / §3.2.4 applied at
+inference time).
+
+The subsystem turns the repo's offline training machinery into an online
+server:
+
+* :mod:`repro.serving.request`  — request objects, FIFO queue, synthetic
+  arrival processes.
+* :mod:`repro.serving.batcher`  — dynamic micro-batcher that pads every
+  batch to one of a small set of declared bucket sizes (static shapes →
+  bounded jit cache).
+* :mod:`repro.serving.sampler`  — fixed-shape inference-time neighbor
+  sampling built on :func:`repro.core.sampling.sample_block_padded`.
+* :mod:`repro.serving.cache`    — layered historical-embedding cache
+  (GNNAutoScale-style) with staleness bounds, built on
+  :class:`repro.core.caching.FeatureStore`.
+* :mod:`repro.serving.server`   — the serve loop: admit → batch → sample
+  → fetch/cache → forward → account latency.
+"""
+from repro.serving.batcher import BucketedBatcher, MicroBatch
+from repro.serving.cache import EmbeddingCache
+from repro.serving.request import (InferenceRequest, RequestQueue,
+                                   poisson_workload)
+from repro.serving.sampler import ServingSampler
+from repro.serving.server import GNNInferenceServer, ServeStats
+
+__all__ = [
+    "BucketedBatcher", "MicroBatch", "EmbeddingCache", "InferenceRequest",
+    "RequestQueue", "poisson_workload", "ServingSampler",
+    "GNNInferenceServer", "ServeStats",
+]

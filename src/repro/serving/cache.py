@@ -1,0 +1,130 @@
+"""Layered historical-embedding cache for online GNN inference.
+
+GNNAutoScale / VR-GCN idea (survey §3.2.4) applied at serving time: keep
+the *layer outputs* ("historical embeddings") of hot vertices so a request
+whose neighborhood is cached skips the entire sub-tree expansion below that
+layer — neighbor sampling, feature fetches and aggregation all disappear
+for hit nodes.
+
+Consistency model:
+
+* a global integer **version clock** advances on :meth:`tick` (one tick ≈
+  one feature/model refresh epoch);
+* an entry written at clock ``t`` has staleness ``clock - t``; entries with
+  staleness > ``max_staleness`` are misses (bounded-staleness reads);
+* :meth:`invalidate` drops entries for nodes whose input features changed,
+  so staleness-0 reads are always exact.
+
+Feature traffic accounting rides on :class:`repro.core.caching.FeatureStore`
+(the repo's existing byte-accounting substrate): the cache owns the store
+and exposes combined hit/byte numbers.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.caching import CACHE_POLICIES, FeatureStore
+from repro.graph.structure import Graph
+
+# sentinel "never written"; large-negative (not int64 min) so computing
+# ``clock - NEVER`` cannot overflow int64
+NEVER = -(2 ** 62)
+
+
+class EmbeddingCache:
+    def __init__(self, g: Graph, layer_dims: Sequence[int], *,
+                 policy: str = "degree", capacity: Optional[int] = None,
+                 max_staleness: int = 0,
+                 feature_capacity: Optional[int] = None):
+        self.g = g
+        self.max_staleness = max_staleness
+        self.clock = 0
+        n = g.num_nodes
+        # None = unbounded (whole graph); 0 is honored as "admit nothing"
+        capacity = n if capacity is None else capacity
+        admit_ids = CACHE_POLICIES[policy](g, capacity)
+        # memory is bounded by the ADMITTED set, not the graph: planes hold
+        # one row per admitted node plus a sacrificial row (index ``rows-1``)
+        # that absorbs reads for non-admitted ids and is never written
+        self.slot = np.full(n, -1, np.int64)
+        self.slot[admit_ids] = np.arange(len(admit_ids))
+        rows = len(admit_ids) + 1
+        self.values: Dict[int, np.ndarray] = {
+            l: np.zeros((rows, d), np.float32)
+            for l, d in enumerate(layer_dims)}
+        self.version: Dict[int, np.ndarray] = {
+            l: np.full(rows, NEVER, np.int64) for l in self.values}
+        # input-feature cache (PaGraph/AliGraph layer of the hierarchy)
+        if feature_capacity is None:
+            feature_capacity = capacity
+        self.features = FeatureStore(
+            g, CACHE_POLICIES[policy](g, feature_capacity))
+        self.hits = 0
+        self.misses = 0
+
+    # -- embedding plane ---------------------------------------------------
+    def lookup(self, layer: int, ids: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+        """Slot-aligned read: returns ``(values, fresh)`` where ``fresh``
+        marks slots served from cache within the staleness bound.  Padded
+        slots (id < 0) are neither hits nor misses."""
+        ids = np.asarray(ids)
+        valid = ids >= 0
+        slot = self.slot[np.maximum(ids, 0)]
+        row = np.where(slot >= 0, slot, len(self.version[layer]) - 1)
+        age = self.clock - self.version[layer][row]
+        fresh = valid & (age <= self.max_staleness)
+        self.hits += int(fresh.sum())
+        self.misses += int((valid & ~fresh).sum())
+        return self.values[layer][row], fresh
+
+    def store(self, layer: int, ids: np.ndarray, values: np.ndarray,
+              mask: np.ndarray) -> None:
+        """Write freshly computed rows for admitted nodes (slot-aligned;
+        ``mask`` selects which slots to write)."""
+        ids = np.asarray(ids)
+        write = np.asarray(mask, bool) & (ids >= 0)
+        write &= self.slot[np.maximum(ids, 0)] >= 0
+        rows = self.slot[ids[write]]
+        self.values[layer][rows] = np.asarray(values)[write]
+        self.version[layer][rows] = self.clock
+
+    # -- consistency -------------------------------------------------------
+    def tick(self, n: int = 1) -> None:
+        """Advance the version clock (a feature/model refresh epoch)."""
+        self.clock += n
+
+    def invalidate(self, ids: np.ndarray) -> None:
+        """Drop entries for nodes whose input features changed — their
+        historical embeddings are wrong at any staleness."""
+        ids = np.asarray(ids)
+        rows = self.slot[ids[ids >= 0]]
+        rows = rows[rows >= 0]
+        for layer in self.version:
+            self.version[layer][rows] = NEVER
+
+    def update_features(self, ids: np.ndarray, rows: np.ndarray) -> None:
+        """Feature update path: mutate the store and invalidate dependents.
+        (1-hop dependents would need graph traversal; serving treats a
+        feature epoch as a tick, which ages ALL entries — the per-node
+        invalidation here handles the updated nodes exactly.)"""
+        self.g.features[ids] = rows
+        self.invalidate(ids)
+        self.tick()
+
+    # -- stats -------------------------------------------------------------
+    @property
+    def hit_ratio(self) -> float:
+        tot = self.hits + self.misses
+        return self.hits / tot if tot else 0.0
+
+    def stats(self) -> dict:
+        return {
+            "embedding_hit_ratio": self.hit_ratio,
+            "embedding_hits": self.hits,
+            "embedding_misses": self.misses,
+            "feature_hit_ratio": self.features.hit_ratio,
+            "feature_bytes": self.features.transferred_bytes,
+            "clock": self.clock,
+        }

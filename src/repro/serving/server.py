@@ -1,0 +1,188 @@
+"""The GNN inference server: admit → micro-batch → sample → cache → forward.
+
+Control flow per micro-batch (bucket B, L layers):
+
+1. the batcher pads B seed slots (-1 = empty) — one of the declared
+   bucket shapes;
+2. the outer (final-layer) block is always sampled fresh;
+3. historical embeddings for the outer block's src slots are looked up in
+   the :class:`EmbeddingCache`; only *misses* are expanded further down
+   and only miss-path input features are fetched (zero rows elsewhere —
+   shapes stay static);
+4. one jitted forward per (bucket, arch) computes the miss rows, splices
+   cached rows in, applies the final layer, and returns fresh rows for
+   write-back.
+
+The clock is virtual: requests carry synthetic arrival stamps and the
+server advances time by the measured wall-clock compute of each batch, so
+p50/p99 include queueing delay and the run is reproducible.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.abstraction import DeviceGraph
+from repro.graph.structure import Graph
+from repro.models.gnn import model as GM
+from repro.models.gnn.model import GNNConfig
+from repro.serving.batcher import BucketedBatcher, MicroBatch
+from repro.serving.cache import EmbeddingCache
+from repro.serving.request import InferenceRequest, RequestQueue
+from repro.serving.sampler import ServingSampler, needed_feature_mask
+
+
+@dataclasses.dataclass
+class ServeStats:
+    served: int = 0
+    batches: int = 0
+    wall_s: float = 0.0
+    latencies_s: List[float] = dataclasses.field(default_factory=list)
+    jit_shapes: set = dataclasses.field(default_factory=set)
+
+    @property
+    def throughput_rps(self) -> float:
+        return self.served / self.wall_s if self.wall_s > 0 else 0.0
+
+    def latency_quantile(self, q: float) -> float:
+        if not self.latencies_s:
+            return 0.0
+        return float(np.quantile(np.asarray(self.latencies_s), q))
+
+    def summary(self) -> dict:
+        return {
+            "served": self.served,
+            "batches": self.batches,
+            "throughput_rps": self.throughput_rps,
+            "p50_ms": self.latency_quantile(0.50) * 1e3,
+            "p99_ms": self.latency_quantile(0.99) * 1e3,
+            "jit_entries": len(self.jit_shapes),
+        }
+
+
+class GNNInferenceServer:
+    def __init__(self, g: Graph, cfg: GNNConfig, params, *,
+                 fanouts: Sequence[int] = (5, 5),
+                 buckets: Sequence[int] = (1, 4, 16, 64),
+                 cache_policy: str = "degree",
+                 cache_capacity: Optional[int] = None,
+                 max_staleness: int = 0,
+                 max_wait_s: float = 0.002,
+                 seed: int = 0):
+        if cfg.arch == "appnp":
+            raise ValueError("appnp serves full-graph; use a sampled arch")
+        if len(fanouts) != cfg.num_layers:
+            raise ValueError("need one fanout per layer")
+        if cfg.num_layers < 2:
+            raise ValueError("serving path assumes >= 2 layers (the "
+                             "historical plane caches the final-layer input)")
+        self.g = g
+        self.cfg = cfg
+        self.params = params
+        self.sampler = ServingSampler(g, fanouts, seed=seed)
+        self.batcher = BucketedBatcher(buckets, max_wait_s=max_wait_s)
+        self.use_cache = cache_policy != "none"
+        # one cached plane: the (post-relu) hidden state entering the
+        # final layer — dimension ``hidden`` for every arch in the zoo
+        self.cache = EmbeddingCache(
+            g, [cfg.hidden], policy=cache_policy, capacity=cache_capacity,
+            max_staleness=max_staleness)
+        self._forward = jax.jit(
+            lambda p, inner, outer, x, ch, fm: GM.forward_blocks_cached(
+                cfg, p, inner, outer, x, ch, fm))
+        self.stats = ServeStats()
+
+    # -- one micro-batch ---------------------------------------------------
+    def serve_batch(self, mb: MicroBatch) -> np.ndarray:
+        """Returns (bucket, num_classes) logits (padded slots garbage)."""
+        outer_b = self.sampler.sample_outer(mb.node_ids)
+        ids1 = outer_b.src_nodes
+        cached_h, fresh = self.cache.lookup(0, ids1)
+        miss = (ids1 >= 0) & ~fresh
+        inner_bs = self.sampler.sample_inner(ids1, expand=miss)
+        need = needed_feature_mask(inner_bs, miss)
+        x_in = self.cache.features.fetch_masked(inner_bs[0].src_nodes, need)
+
+        inner_dev = [DeviceGraph.from_block(b) for b in inner_bs]
+        outer_dev = DeviceGraph.from_block(outer_b)
+        shape_key = (mb.bucket,
+                     tuple((b.num_dst, b.num_src, len(b.edge_mask))
+                           for b in inner_bs + [outer_b]))
+        self.stats.jit_shapes.add(shape_key)
+
+        logits, h_fresh = self._forward(
+            self.params, inner_dev, outer_dev, jnp.asarray(x_in),
+            jnp.asarray(cached_h), jnp.asarray(fresh))
+        if self.use_cache:
+            self.cache.store(0, ids1, np.asarray(h_fresh), miss)
+        return np.asarray(logits)
+
+    def warmup(self, node_id: int = 0) -> None:
+        """Compile every declared bucket once (excluded from stats)."""
+        for b in self.batcher.buckets:
+            ids = np.full((b,), -1, np.int64)
+            ids[0] = node_id
+            self.serve_batch(MicroBatch([], ids, b, 0.0))
+        # warmup traffic must not pollute serving stats
+        self.cache.hits = self.cache.misses = 0
+        self.cache.features.hits = self.cache.features.misses = 0
+
+    # -- the serve loop ----------------------------------------------------
+    def run(self, workload: List[InferenceRequest], *,
+            tick_every_s: float = 0.0) -> ServeStats:
+        """Serve a workload to completion.  ``tick_every_s`` simulates
+        periodic feature-refresh epochs: every interval of virtual time the
+        cache's version clock advances, aging historical embeddings — the
+        staleness bound then decides whether they can still be served."""
+        workload = sorted(workload, key=lambda r: r.arrival_s)
+        queue = RequestQueue()
+        vnow = 0.0
+        next_tick = tick_every_s if tick_every_s > 0 else float("inf")
+        i = 0
+        t_start = time.perf_counter()
+        while i < len(workload) or len(queue):
+            while vnow >= next_tick:
+                self.cache.tick()
+                next_tick += tick_every_s
+            while i < len(workload) and workload[i].arrival_s <= vnow:
+                queue.push(workload[i])
+                i += 1
+            drained = i >= len(workload)
+            mb = self.batcher.form(queue, vnow, force=drained)
+            if mb is None:
+                # jump to the next event: an arrival, the head-of-line
+                # request's max_wait deadline, or a cache-clock tick —
+                # NOT straight to the next arrival, which would make
+                # queued requests wait a full inter-arrival gap
+                events = []
+                if i < len(workload):
+                    events.append(workload[i].arrival_s)
+                oldest = queue.oldest_arrival()
+                if oldest is not None:
+                    events.append(oldest + self.batcher.max_wait_s)
+                if next_tick != float("inf"):
+                    events.append(next_tick)
+                vnow = max(vnow, min(events))
+                continue
+            t0 = time.perf_counter()
+            logits = self.serve_batch(mb)
+            vnow += time.perf_counter() - t0
+            for j, r in enumerate(mb.requests):
+                r.logits = logits[mb.slots[j]]
+                r.done_s = vnow
+                self.stats.latencies_s.append(r.latency_s)
+            self.stats.served += len(mb.requests)
+            self.stats.batches += 1
+        self.stats.wall_s += time.perf_counter() - t_start
+        return self.stats
+
+    def summary(self) -> dict:
+        out = self.stats.summary()
+        out.update(self.cache.stats())
+        out["pad_overhead"] = self.batcher.pad_overhead
+        return out

@@ -1,6 +1,8 @@
 """Partitioning invariants + survey-claim sanity (§3.2.1 / Table 3)."""
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import partitioning as P

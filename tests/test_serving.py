@@ -1,0 +1,311 @@
+"""Serving subsystem invariants: bucket/shape discipline, embedding-cache
+consistency (exact at staleness 0, bounded under staleness), and the serve
+loop end-to-end."""
+import copy
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.sampling import sample_block_padded
+from repro.graph import generators as G
+from repro.models.gnn import model as GM
+from repro.models.gnn.model import GNNConfig
+from repro.serving import (BucketedBatcher, EmbeddingCache,
+                           GNNInferenceServer, InferenceRequest,
+                           RequestQueue, ServingSampler, poisson_workload)
+from repro.serving.batcher import MicroBatch
+from repro.serving.sampler import needed_feature_mask
+
+BUCKETS = (1, 4, 8)
+FANOUTS = (3, 3)
+
+
+@pytest.fixture(scope="module")
+def graph():
+    g = G.sbm(200, 4, p_in=0.9, p_out=0.02, seed=0)
+    return G.featurize(g, 16, seed=0, class_sep=1.5)
+
+
+@pytest.fixture(scope="module")
+def model(graph):
+    cfg = GNNConfig(arch="sage", feat_dim=16, hidden=32,
+                    num_classes=graph.num_classes)
+    params = GM.init_gnn(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _server(graph, model, **kw):
+    cfg, params = model
+    kw.setdefault("fanouts", FANOUTS)
+    kw.setdefault("buckets", BUCKETS)
+    kw.setdefault("cache_policy", "degree")
+    kw.setdefault("cache_capacity", graph.num_nodes)
+    kw.setdefault("seed", 0)
+    return GNNInferenceServer(graph, cfg, params, **kw)
+
+
+def _batch(node_ids, bucket):
+    ids = np.full((bucket,), -1, np.int64)
+    ids[:len(node_ids)] = node_ids
+    return MicroBatch([], ids, bucket, 0.0)
+
+
+# ---------------------------------------------------------------------------
+# batcher: every emitted shape is from the declared bucket set
+# ---------------------------------------------------------------------------
+
+def test_batcher_emits_only_declared_buckets():
+    b = BucketedBatcher(buckets=BUCKETS, max_wait_s=0.01)
+    rng = np.random.default_rng(0)
+    q = RequestQueue()
+    rid = 0
+    for trial in range(50):
+        for _ in range(int(rng.integers(1, 12))):
+            q.push(InferenceRequest(rid, int(rng.integers(0, 100)),
+                                    arrival_s=0.0))
+            rid += 1
+        mb = b.form(q, now=1.0)          # head-of-line waited > max_wait
+        assert mb is not None
+        assert mb.bucket in BUCKETS
+        assert mb.node_ids.shape == (mb.bucket,)
+        # unique real ids form a prefix; pads are -1; every request maps
+        # to a real slot
+        k = len(set(r.node_id for r in mb.requests))
+        assert k <= mb.bucket
+        real = mb.node_ids[:k]
+        assert np.all(real >= 0)
+        assert len(np.unique(real)) == k
+        assert np.all(mb.node_ids[k:] == -1)
+        assert all(mb.node_ids[s] == r.node_id
+                   for s, r in zip(mb.slots, mb.requests))
+        q = RequestQueue()               # fresh queue per trial
+
+
+def test_batcher_waits_below_max_wait():
+    b = BucketedBatcher(buckets=BUCKETS, max_wait_s=0.5)
+    q = RequestQueue()
+    q.push(InferenceRequest(0, 5, arrival_s=0.0))
+    assert b.form(q, now=0.1) is None            # not full, not timed out
+    assert b.form(q, now=0.6) is not None        # timed out
+    q.push(InferenceRequest(1, 5, arrival_s=1.0))
+    assert b.form(q, now=1.0, force=True) is not None
+
+
+def test_batcher_dedups_duplicate_nodes():
+    """Requests for the same node share a slot — the sampler requires
+    unique dst ids and one prediction serves every duplicate."""
+    b = BucketedBatcher(buckets=BUCKETS)
+    q = RequestQueue()
+    for rid, nid in enumerate([7, 7, 9, 7]):
+        q.push(InferenceRequest(rid, nid, arrival_s=0.0))
+    mb = b.form(q, now=0.0, force=True)
+    assert mb.bucket == 4                        # 2 unique ids -> bucket 4
+    real = mb.node_ids[mb.node_ids >= 0]
+    assert sorted(real.tolist()) == [7, 9]
+    assert [mb.node_ids[s] for s in mb.slots] == [7, 7, 9, 7]
+
+
+def test_duplicate_requests_get_correct_logits(graph, model):
+    """Regression: duplicate node ids in one micro-batch must each be
+    served the same (correct) logits as a solo request for that node."""
+    srv = _server(graph, model, cache_policy="none")
+    solo = srv.serve_batch(_batch(np.asarray([7]), 1))[0]
+    srv2 = _server(graph, model, cache_policy="none")
+    srv2.warmup()
+    wl = [InferenceRequest(0, 7, 0.0), InferenceRequest(1, 7, 0.0),
+          InferenceRequest(2, 7, 0.0)]
+    srv2.run(wl)
+    for r in wl:
+        np.testing.assert_array_equal(r.logits, solo)
+
+
+def test_run_respects_max_wait_deadline(graph, model):
+    """Regression: with requests queued, the virtual clock must advance to
+    the head-of-line max_wait deadline, not to the next arrival."""
+    srv = _server(graph, model, max_wait_s=0.002)
+    srv.warmup()
+    wl = [InferenceRequest(0, 3, 0.0), InferenceRequest(1, 4, 5.0)]
+    srv.run(wl)
+    # request 0 waits ~max_wait + compute, NOT the 5 s inter-arrival gap
+    assert wl[0].latency_s < 2.0, wl[0].latency_s
+    assert wl[1].latency_s >= 0
+
+
+def test_batcher_bucket_for():
+    b = BucketedBatcher(buckets=BUCKETS)
+    assert b.bucket_for(1) == 1
+    assert b.bucket_for(2) == 4
+    assert b.bucket_for(5) == 8
+    assert b.bucket_for(99) == 8                 # capped at largest
+
+
+# ---------------------------------------------------------------------------
+# sampler: block shapes are a pure function of (bucket, fanouts)
+# ---------------------------------------------------------------------------
+
+def test_sampler_static_shapes_per_bucket(graph):
+    s = ServingSampler(graph, FANOUTS, seed=0)
+    rng = np.random.default_rng(1)
+    for bucket in BUCKETS:
+        declared = s.block_shapes(bucket)
+        for fill in (1, bucket):
+            ids = np.full((bucket,), -1, np.int64)
+            ids[:fill] = rng.choice(graph.num_nodes, fill, replace=False)
+            mb = s.sample(ids)
+            assert len(mb.blocks) == len(FANOUTS)
+            got = [(b.num_dst, b.num_src, len(b.edge_mask))
+                   for b in mb.blocks]
+            assert got == declared, (bucket, fill)
+            for b in mb.blocks:
+                # dst nodes are a slot-aligned prefix of src nodes
+                np.testing.assert_array_equal(b.src_nodes[:b.num_dst],
+                                              b.dst_nodes)
+                valid_e = b.edge_mask.sum()
+                assert np.all(b.edge_src[:valid_e] < b.num_src)
+                assert np.all(b.edge_dst[:valid_e] < b.num_dst)
+
+
+def test_sampler_deterministic_per_node(graph):
+    """A node's sampled neighborhood must not depend on batch composition
+    (cache-consistency prerequisite)."""
+    s = ServingSampler(graph, FANOUTS, seed=0)
+    gr = graph.reverse()
+    b1 = sample_block_padded(graph, gr, np.asarray([7, -1]), 3,
+                             s._rng_for(1))
+    b2 = sample_block_padded(graph, gr, np.asarray([7, 42]), 3,
+                             s._rng_for(1))
+    e1 = {(int(b1.src_nodes[s_]), int(b1.dst_nodes[d]))
+          for s_, d in zip(b1.edge_src[b1.edge_mask],
+                           b1.edge_dst[b1.edge_mask])}
+    e2 = {(int(b2.src_nodes[s_]), int(b2.dst_nodes[d]))
+          for s_, d in zip(b2.edge_src[b2.edge_mask],
+                           b2.edge_dst[b2.edge_mask])}
+    assert {e for e in e1} <= e2                  # node 7's edges identical
+
+
+def test_expansion_mask_restricts_sampling(graph):
+    s = ServingSampler(graph, FANOUTS, seed=0)
+    ids = np.asarray([3, 9, 27, 81], np.int64)
+    outer = s.sample_outer(ids)
+    none_expanded = s.sample_inner(outer.src_nodes,
+                                   np.zeros(outer.num_src, bool))
+    assert all(b.edge_mask.sum() == 0 for b in none_expanded)
+    need = needed_feature_mask(none_expanded,
+                               np.zeros(none_expanded[-1].num_dst, bool))
+    assert not need.any()                        # no misses -> no fetches
+
+
+# ---------------------------------------------------------------------------
+# embedding cache: exactness and staleness semantics
+# ---------------------------------------------------------------------------
+
+def test_cached_logits_exact_at_staleness_zero(graph, model):
+    ids = np.asarray([11, 23, 42, 99], np.int64)
+    srv_none = _server(graph, model, cache_policy="none")
+    srv = _server(graph, model, max_staleness=0)
+    want = srv_none.serve_batch(_batch(ids, 4))
+    srv.serve_batch(_batch(ids, 4))              # cold: populates cache
+    assert srv.cache.hits == 0 or srv.cache.hit_ratio < 1.0
+    got = srv.serve_batch(_batch(ids, 4))        # warm: served from cache
+    assert srv.cache.hits > 0
+    np.testing.assert_array_equal(got[:4], want[:4])
+
+
+def test_cached_logits_bounded_at_staleness_s(graph, model):
+    eps = 1e-2
+    ids = np.asarray([11, 23, 42, 99], np.int64)
+    srv = _server(graph, model, max_staleness=2)
+    srv.serve_batch(_batch(ids, 4))              # populate at clock 0
+    rng = np.random.default_rng(0)
+    old_feats = graph.features.copy()
+    try:
+        graph.features += rng.normal(0, eps, graph.features.shape
+                                     ).astype(np.float32)
+        srv.cache.tick()                         # staleness 1 <= bound 2
+        stale = srv.serve_batch(_batch(ids, 4))
+        assert srv.cache.hits > 0                # actually served stale
+        fresh = _server(graph, model,
+                        cache_policy="none").serve_batch(_batch(ids, 4))
+        diff = np.abs(stale[:4] - fresh[:4]).max()
+        assert 0 < diff < 50 * eps               # stale but bounded
+    finally:
+        graph.features[:] = old_feats
+
+
+def test_capacity_zero_admits_nothing(graph):
+    """Regression: capacity=0 must mean 'admit nothing', not full-graph."""
+    c = EmbeddingCache(graph, [8], policy="degree", capacity=0)
+    ids = np.asarray([0, 1, 2])
+    c.store(0, ids, np.ones((3, 8), np.float32), np.ones(3, bool))
+    assert not c.lookup(0, ids)[1].any()
+    full = EmbeddingCache(graph, [8], policy="degree")   # None = unbounded
+    full.store(0, ids, np.ones((3, 8), np.float32), np.ones(3, bool))
+    assert full.lookup(0, ids)[1].all()
+
+
+def test_staleness_bound_and_invalidation(graph):
+    c = EmbeddingCache(graph, [8], policy="degree",
+                       capacity=graph.num_nodes, max_staleness=1)
+    ids = np.asarray([1, 2, 3])
+    c.store(0, ids, np.ones((3, 8), np.float32), np.ones(3, bool))
+    assert c.lookup(0, ids)[1].all()
+    c.tick()                                     # staleness 1: still fresh
+    assert c.lookup(0, ids)[1].all()
+    c.tick()                                     # staleness 2 > bound
+    assert not c.lookup(0, ids)[1].any()
+    c.store(0, ids, np.ones((3, 8), np.float32), np.ones(3, bool))
+    c.invalidate(np.asarray([2]))
+    fresh = c.lookup(0, ids)[1]
+    assert fresh[0] and not fresh[1] and fresh[2]
+    # padded slots are neither hits nor misses
+    h0, m0 = c.hits, c.misses
+    c.lookup(0, np.asarray([-1, -1]))
+    assert (c.hits, c.misses) == (h0, m0)
+
+
+def test_cache_hits_skip_feature_fetches(graph, model):
+    ids = np.asarray([5, 6, 7, 8], np.int64)
+    srv = _server(graph, model, max_staleness=0)
+    srv.serve_batch(_batch(ids, 4))
+    cold_rows = srv.cache.features.hits + srv.cache.features.misses
+    assert cold_rows > 0
+    srv.serve_batch(_batch(ids, 4))
+    # warm serve: every ids1 slot is an embedding hit, so the needed-mask
+    # is empty and NO feature rows are requested at all
+    warm_rows = srv.cache.features.hits + srv.cache.features.misses
+    assert warm_rows == cold_rows
+
+
+# ---------------------------------------------------------------------------
+# server end-to-end
+# ---------------------------------------------------------------------------
+
+def test_server_end_to_end(graph, model):
+    srv = _server(graph, model, cache_capacity=graph.num_nodes // 4)
+    srv.warmup()
+    wl = poisson_workload(40, np.arange(graph.num_nodes), 2000.0, seed=2)
+    stats = srv.run(copy.deepcopy(wl))
+    assert stats.served == 40
+    assert stats.throughput_rps > 0
+    assert all(lat >= 0 for lat in stats.latencies_s)
+    assert stats.latency_quantile(0.99) >= stats.latency_quantile(0.50)
+    # static-shape discipline: at most one jit entry per declared bucket
+    assert len(stats.jit_shapes) <= len(BUCKETS)
+    s = srv.summary()
+    assert 0.0 <= s["embedding_hit_ratio"] <= 1.0
+
+
+@pytest.mark.parametrize("arch", ["gcn", "gat", "gin"])
+def test_server_other_archs(graph, arch):
+    cfg = GNNConfig(arch=arch, feat_dim=16, hidden=32,
+                    num_classes=graph.num_classes)
+    params = GM.init_gnn(cfg, jax.random.PRNGKey(1))
+    srv = GNNInferenceServer(graph, cfg, params, fanouts=FANOUTS,
+                             buckets=(4,), cache_policy="degree",
+                             cache_capacity=graph.num_nodes, seed=0)
+    ids = np.asarray([10, 20, 30], np.int64)
+    cold = srv.serve_batch(_batch(ids, 4))
+    warm = srv.serve_batch(_batch(ids, 4))
+    assert np.isfinite(cold[:3]).all()
+    np.testing.assert_allclose(warm[:3], cold[:3], atol=1e-5)
