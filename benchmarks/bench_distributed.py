@@ -1,11 +1,43 @@
 """Survey Tables 2 & 7, §3.2.5–§3.2.9: distributed GNN benchmarks (push vs
 pull, data-parallel vs P3 hybrid, BSP vs stale sync, all-reduce vs PS) —
-runs the payload in a subprocess with 8 forced host devices."""
+runs the payload in a subprocess with 8 forced host devices — plus the
+partition-aware mini-batch pipeline's cross-partition traffic with and
+without the halo cache (PaGraph claim, host-side accounting)."""
 import os
 import subprocess
 import sys
+import time
 
-from benchmarks.common import ROOT, SRC
+import numpy as np
+
+from benchmarks.common import ROOT, SRC, emit
+
+
+def _halo_traffic():
+    """Cross-partition fetched bytes on the reddit-like graph, halo cache
+    (degree policy, capacity = 10% of nodes) vs no cache."""
+    from repro.distributed import DistributedMinibatchSampler
+    from repro.graph.datasets import load
+
+    g = load("reddit-like").graph
+    n = g.num_nodes
+    bytes_by_policy = {}
+    for policy in ("none", "degree"):
+        s = DistributedMinibatchSampler(
+            g, 4, [5, 5], 64, partitioner="hash", cache_policy=policy,
+            cache_capacity=n // 10, seed=0)
+        rng = np.random.default_rng(0)
+        t0 = time.perf_counter()     # time sampling only, not setup
+        for _ in range(8):
+            s.sample_global(rng.choice(n, 64, replace=False))
+        st = s.stats()
+        bytes_by_policy[policy] = st["cross_partition_bytes"]
+        emit(f"distributed/minibatch_xpart_{policy}",
+             (time.perf_counter() - t0) * 1e6 / 8,
+             f"bytes={st['cross_partition_bytes']}"
+             f";hit={st['halo_hit_ratio']:.3f}")
+    saving = 1.0 - bytes_by_policy["degree"] / max(bytes_by_policy["none"], 1)
+    emit("distributed/halo_cache_saving", 0.0, f"saving={saving:.1%}")
 
 
 def main():
@@ -22,6 +54,7 @@ def main():
     for line in r.stdout.splitlines():
         if "," in line and not line.startswith("SPMD"):
             print(line, flush=True)
+    _halo_traffic()
 
 
 if __name__ == "__main__":

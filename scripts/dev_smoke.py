@@ -12,7 +12,9 @@ from repro.optim import AdamW
 
 ONLY = sys.argv[1:] if len(sys.argv) > 1 else None
 RUN_SERVING = ONLY is None or "serve_gnn" in ONLY
-ARCHES = [a for a in (ONLY or ARCH_IDS) if a != "serve_gnn"]
+RUN_DIST = ONLY is None or "dist_gnn" in ONLY
+ARCHES = [a for a in (ONLY or ARCH_IDS)
+          if a not in ("serve_gnn", "dist_gnn")]
 
 
 def concrete_batch(cfg, B, S, kind, key):
@@ -106,4 +108,24 @@ if RUN_SERVING:
     assert s["jit_entries"] <= len(srv.batcher.buckets), s
     print(f"OK {'serve_gnn':24s} rps={s['throughput_rps']:.0f} "
           f"p99={s['p99_ms']:.2f}ms hit={s['embedding_hit_ratio']:.2%}")
+
+if RUN_DIST:
+    # distributed mini-batch path: the 2-device gradient-equivalence check
+    # in a subprocess (device count is fixed at jax import, so the forced
+    # multi-host topology cannot run in this process)
+    import os
+    import subprocess
+
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(root, "src")
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run(
+        [sys.executable,
+         os.path.join(root, "tests", "distributed_train_check.py"),
+         "2", "hash", "sage"],
+        capture_output=True, text=True, timeout=600, env=env)
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "PASS dist-equivalence" in r.stdout, r.stdout
+    print(f"OK {'dist_gnn':24s} {r.stdout.strip().splitlines()[-1]}")
 print("ALL OK")

@@ -1,0 +1,19 @@
+#!/usr/bin/env bash
+# Tiered test runner — one command locally and in CI.
+#
+#   scripts/run_tests.sh            # tier1: the default fast suite
+#   scripts/run_tests.sh tier2      # slow + distributed matrix (subprocess,
+#                                   # forced multi-device)
+#   scripts/run_tests.sh all        # everything
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+tier="${1:-tier1}"
+shift || true
+case "$tier" in
+  tier1) exec python -m pytest -q -m "not slow and not distributed" "$@" ;;
+  tier2) exec python -m pytest -q -m "slow or distributed" "$@" ;;
+  all)   exec python -m pytest -q "$@" ;;
+  *) echo "usage: $0 [tier1|tier2|all] [pytest args...]" >&2; exit 2 ;;
+esac

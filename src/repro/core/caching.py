@@ -24,6 +24,11 @@ import numpy as np
 
 from repro.graph.structure import Graph
 
+# per-RPC envelope cost of one remote pull (DistDGL KVStore-style request
+# header: keys, shard route, lengths) — charged once per fetch call that
+# actually moves rows, never for calls fully served locally/from cache
+HEADER_BYTES = 64
+
 
 class FeatureStore:
     """Global feature server + device-side cache with traffic accounting."""
@@ -36,26 +41,43 @@ class FeatureStore:
                               if g.features is not None else 4)
         self.hits = 0
         self.misses = 0
+        self.requests = 0            # remote pull RPCs actually issued
 
     def fetch(self, ids: np.ndarray) -> np.ndarray:
         ids = np.asarray(ids)
         ids = ids[ids >= 0]
         hit = self.cached[ids]
         self.hits += int(hit.sum())
-        self.misses += int((~hit).sum())
+        miss_rows = int((~hit).sum())
+        self.misses += miss_rows
+        if miss_rows:
+            self.requests += 1
         return self.g.features[ids] if self.g.features is not None else ids
+
+    def _local_rows_mask(self, safe_ids: np.ndarray,
+                         needed: np.ndarray) -> np.ndarray:
+        """Hook: needed rows served from local memory — no cache lookup,
+        no traffic.  The base store owns nothing locally; the distributed
+        ``PartitionFeatureStore`` overrides this with partition ownership."""
+        return np.zeros(len(safe_ids), bool)
 
     def fetch_masked(self, ids: np.ndarray, needed: np.ndarray) -> np.ndarray:
         """Slot-aligned fetch for padded serving batches: ``ids`` may
         contain -1 pads and ``needed`` marks the slots whose features are
         actually required (the rest return zero rows, keeping the batch
-        shape static).  Only needed rows count toward traffic."""
+        shape static).  Only needed non-local rows count toward traffic,
+        and a call whose mask selects no rows (or only local/cache hits)
+        issues no remote request — it adds 0 bytes, not a header."""
         ids = np.asarray(ids)
         needed = np.asarray(needed, bool) & (ids >= 0)
         safe = np.maximum(ids, 0)
-        hit = self.cached[safe] & needed
+        remote = needed & ~self._local_rows_mask(safe, needed)
+        hit = self.cached[safe] & remote
         self.hits += int(hit.sum())
-        self.misses += int((needed & ~hit).sum())
+        miss_rows = int((remote & ~hit).sum())
+        self.misses += miss_rows
+        if miss_rows:
+            self.requests += 1
         if self.g.features is None:
             return safe
         out = np.zeros((len(ids), self.g.features.shape[1]),
@@ -70,7 +92,7 @@ class FeatureStore:
 
     @property
     def transferred_bytes(self) -> int:
-        return self.misses * self.bytes_per_row
+        return self.misses * self.bytes_per_row + self.requests * HEADER_BYTES
 
 
 def no_cache(g: Graph, capacity: int) -> np.ndarray:

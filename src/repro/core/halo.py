@@ -1,0 +1,106 @@
+"""Ownership + halo (ghost) vertex layout for partition-aware training.
+
+The surveyed distributed mini-batch systems (DistDGL, PaGraph, DistGNN —
+§3.2.1/§3.2.4) split a graph with an edge-cut partitioner and then give
+each partition two vertex sets:
+
+* **owned** — vertices the partition is responsible for (its seeds, its
+  labels, its slice of the feature matrix);
+* **halo** (ghost) — remote endpoints of cut edges: the vertices whose
+  features/embeddings must be fetched from other partitions to aggregate
+  onto owned destinations.
+
+This module computes both from any :class:`EdgeCutPartition`, plus
+fixed-shape exchange index arrays (every partition's halo list padded to
+one common cap) so a halo feature exchange is a single static-shape
+gather per partition — the jit-stable layout the shard_map training step
+and the halo FeatureStore cache both key off.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List
+
+import numpy as np
+
+from repro.core.partitioning import EdgeCutPartition
+from repro.graph.structure import Graph
+
+
+@dataclasses.dataclass
+class HaloLayout:
+    n_parts: int
+    owner: np.ndarray            # (N,) vertex -> owning partition
+    owned: List[np.ndarray]      # per-partition owned vertex ids (sorted)
+    halo_in: List[np.ndarray]    # remote in-neighbors of owned vertices
+    halo_out: List[np.ndarray]   # remote out-neighbors of owned vertices
+    halo: List[np.ndarray]       # ghost set = halo_in ∪ halo_out (sorted)
+    halo_idx: np.ndarray         # (P, H_cap) global ids, -1 pad
+    halo_mask: np.ndarray        # (P, H_cap) slot validity
+
+    @property
+    def halo_cap(self) -> int:
+        return self.halo_idx.shape[1]
+
+    def ghost_fraction(self) -> float:
+        """Mean #ghost copies per partition / N — the replication overhead
+        an edge-cut pays (survey §3.2.1)."""
+        n = len(self.owner)
+        return float(np.mean([len(h) for h in self.halo]) / max(n, 1))
+
+    # -- fixed-shape exchange ----------------------------------------------
+    def gather_halo(self, feats: np.ndarray) -> np.ndarray:
+        """Pull each partition's halo feature rows into a (P, H_cap, F)
+        buffer (pad slots zero).  Shape depends only on the layout, never
+        on which partition is gathering."""
+        out = np.zeros((self.n_parts, self.halo_cap, feats.shape[1]),
+                       feats.dtype)
+        out[self.halo_mask] = feats[self.halo_idx[self.halo_mask]]
+        return out
+
+    def scatter_halo(self, gathered: np.ndarray,
+                     num_features: int) -> np.ndarray:
+        """Inverse routing: write exchanged rows back to a global (N, F)
+        buffer.  Round-trips exactly: scatter(gather(x)) restores x on
+        every halo vertex (partitions holding the same ghost write
+        identical rows)."""
+        buf = np.zeros((len(self.owner), num_features), gathered.dtype)
+        buf[self.halo_idx[self.halo_mask]] = gathered[self.halo_mask]
+        return buf
+
+    def exchange_bytes(self, bytes_per_row: int) -> int:
+        """Bytes one full (uncached) halo exchange moves across partitions."""
+        return int(sum(len(h) for h in self.halo)) * bytes_per_row
+
+
+def build_halo(g: Graph, part: EdgeCutPartition) -> HaloLayout:
+    """Classify every edge endpoint as owned-or-ghost per partition.
+
+    For partition ``p``: a cut edge ``(u, v)`` with ``owner(v) == p``
+    contributes ``u`` to ``halo_in[p]`` (needed to aggregate onto owned
+    destinations, the pull direction); ``owner(u) == p`` contributes ``v``
+    to ``halo_out[p]`` (push direction).  The ghost set is the union, so
+    every endpoint of every edge touching ``p`` is owned or halo — the
+    invariant the property tests assert.
+    """
+    owner = np.asarray(part.assignment)
+    e = g.edges()
+    src_o = owner[e[:, 0]]
+    dst_o = owner[e[:, 1]]
+    cut = src_o != dst_o
+    owned, halo_in, halo_out, halo = [], [], [], []
+    for p in range(part.n_parts):
+        owned.append(np.flatnonzero(owner == p).astype(np.int64))
+        hi = np.unique(e[cut & (dst_o == p), 0])
+        ho = np.unique(e[cut & (src_o == p), 1])
+        halo_in.append(hi)
+        halo_out.append(ho)
+        halo.append(np.union1d(hi, ho))
+    cap = max(1, max((len(h) for h in halo), default=1))
+    halo_idx = np.full((part.n_parts, cap), -1, np.int64)
+    halo_mask = np.zeros((part.n_parts, cap), bool)
+    for p, h in enumerate(halo):
+        halo_idx[p, :len(h)] = h
+        halo_mask[p, :len(h)] = True
+    return HaloLayout(part.n_parts, owner, owned, halo_in, halo_out, halo,
+                      halo_idx, halo_mask)

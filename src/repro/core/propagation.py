@@ -260,6 +260,12 @@ def make_distributed_gcn_step(optimizer, n_dev: int, *, mode: str = "pull"):
         def pstep(params, opt_state, x, es_l, ed_g, em, indeg, outdeg,
                   labels, lmask):
             n_local = x.shape[0]
+            # psum the (parameter-free) count OUTSIDE the differentiated
+            # function: under check_rep=False a psum inside loss_fn
+            # transposes to another psum, scaling gradients by n_dev
+            # (masked by Adam scale-invariance + clipping, caught by the
+            # gradient-equivalence matrix in tests/distributed_train_check)
+            cnt = jnp.maximum(jax.lax.psum(jnp.sum(lmask), AXIS), 1.0)
 
             def loss_fn(p):
                 h = gcn_forward_push(p, x, (es_l, ed_g, em), outdeg,
@@ -267,11 +273,10 @@ def make_distributed_gcn_step(optimizer, n_dev: int, *, mode: str = "pull"):
                 logz = jax.nn.logsumexp(h, axis=-1)
                 gold = jnp.take_along_axis(h, labels[:, None],
                                            axis=-1)[:, 0]
-                total = jax.lax.psum(jnp.sum((logz - gold) * lmask), AXIS)
-                cnt = jax.lax.psum(jnp.sum(lmask), AXIS)
-                return total / jnp.maximum(cnt, 1.0)
+                return jnp.sum((logz - gold) * lmask) / cnt
 
-            loss, grads = jax.value_and_grad(loss_fn)(params)
+            local_loss, grads = jax.value_and_grad(loss_fn)(params)
+            loss = jax.lax.psum(local_loss, AXIS)
             grads = jax.tree.map(lambda g_: jax.lax.psum(g_, AXIS), grads)
             params, opt_state = optimizer.apply(params, grads, opt_state)
             return params, opt_state, loss
@@ -298,6 +303,9 @@ def make_distributed_gcn_step(optimizer, n_dev: int, *, mode: str = "pull"):
         n_local = x.shape[0]
         indeg_l = indeg
         outdeg_all = outdeg  # replicated (N_pad,)
+        # count psum'd outside the VJP (see pstep: psum-in-loss_fn would
+        # scale gradients by n_dev under check_rep=False)
+        cnt = jnp.maximum(jax.lax.psum(jnp.sum(lmask), AXIS), 1.0)
 
         def loss_fn(p):
             h = gcn_forward_local(
@@ -305,12 +313,10 @@ def make_distributed_gcn_step(optimizer, n_dev: int, *, mode: str = "pull"):
                 mode=mode, halo_cache=halo_cache)
             logz = jax.nn.logsumexp(h, axis=-1)
             gold = jnp.take_along_axis(h, labels[:, None], axis=-1)[:, 0]
-            local = jnp.sum((logz - gold) * lmask)
-            total = jax.lax.psum(local, AXIS)
-            cnt = jax.lax.psum(jnp.sum(lmask), AXIS)
-            return total / jnp.maximum(cnt, 1.0)
+            return jnp.sum((logz - gold) * lmask) / cnt
 
-        loss, grads = jax.value_and_grad(loss_fn)(params)
+        local_loss, grads = jax.value_and_grad(loss_fn)(params)
+        loss = jax.lax.psum(local_loss, AXIS)
         # each device's grad covers only its local psum contribution, so
         # the decentralized combine is a SUM (all-reduce), not a mean
         grads = jax.tree.map(lambda g_: jax.lax.psum(g_, AXIS), grads)

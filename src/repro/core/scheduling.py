@@ -56,12 +56,17 @@ class PipelinedLoader:
         return item
 
     def close(self):
+        """Stop and JOIN the workers: after close() returns no worker is
+        mid-``sample_fn``, so any state the sampler mutates (e.g. traffic
+        counters) is quiescent and safe to read exactly."""
         self.stop.set()
         try:
             while True:
                 self.q.get_nowait()
         except queue.Empty:
             pass
+        for w in self.workers:
+            w.join()
 
 
 class WorkStealingPool:

@@ -1,0 +1,19 @@
+"""Partition-aware distributed mini-batch training (DistDGL/PaGraph
+recipe): halo layout → per-partition deterministic sampling → halo-cached
+remote feature fetch → double-buffered prefetch → shard_map psum step.
+"""
+from repro.distributed.pipeline import (HostPrefetcher, collate,
+                                        make_distributed_minibatch_step)
+from repro.distributed.sampler import (DistributedMinibatchSampler,
+                                       PartitionBatch,
+                                       PartitionFeatureStore, device_blocks)
+
+__all__ = [
+    "DistributedMinibatchSampler",
+    "PartitionBatch",
+    "PartitionFeatureStore",
+    "HostPrefetcher",
+    "collate",
+    "device_blocks",
+    "make_distributed_minibatch_step",
+]

@@ -1,0 +1,181 @@
+"""Partition-aware distributed mini-batch sampling (the DistDGL/PaGraph
+recipe, survey §3.2: partition → per-partition neighbor sampling → remote
+feature fetch through a halo cache).
+
+Each partition samples ONLY its owned seeds; the neighbor expansion itself
+reuses the deterministic padded sampler built on
+:func:`repro.core.sampling.sample_block_padded` (shared with serving, so a
+node's sampled neighborhood is a pure function of ``(seed, layer, node)``).
+That determinism is what makes the pipeline *partition-invariant*: the
+union of all partitions' per-seed computation trees equals the tree a
+single device would sample for the same seeds — the property the
+cross-layer gradient-equivalence test matrix asserts.
+
+Remote features flow through :class:`PartitionFeatureStore`: rows the
+partition owns are free local reads; rows owned elsewhere are
+cross-partition traffic unless they sit in the halo cache (seeded by the
+PaGraph ``degree_cache`` / AliGraph ``importance_cache`` policies,
+restricted to the partition's ghost set from :mod:`repro.core.halo`).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+from repro.core import caching as CA
+from repro.core.caching import FeatureStore
+from repro.core.halo import HaloLayout, build_halo
+from repro.core.partitioning import (EdgeCutPartition,
+                                     partition as make_partition)
+from repro.core.sampling import Block
+from repro.graph.structure import Graph
+from repro.serving.sampler import ServingSampler, needed_feature_mask
+
+
+class PartitionFeatureStore(FeatureStore):
+    """A :class:`FeatureStore` as seen from one partition: owned rows are
+    local reads (no traffic), remote rows go through the halo cache, and
+    only cache-missing remote rows cross the interconnect — the quantity
+    ``transferred_bytes`` counts (rows + per-RPC header)."""
+
+    def __init__(self, g: Graph, owned_ids: np.ndarray,
+                 cache_ids: np.ndarray):
+        super().__init__(g, cache_ids)
+        self.owned = np.zeros(g.num_nodes, bool)
+        self.owned[owned_ids] = True
+        self.local_rows = 0
+
+    def _local_rows_mask(self, safe_ids: np.ndarray,
+                         needed: np.ndarray) -> np.ndarray:
+        local = needed & self.owned[safe_ids]
+        self.local_rows += int(local.sum())
+        return local
+
+
+@dataclasses.dataclass
+class PartitionBatch:
+    """One partition's share of a global mini-batch, fixed shapes."""
+    part: int
+    seeds: np.ndarray            # (B_cap,) padded owned seeds (-1 empty)
+    blocks: List[Block]          # innermost first, caps from block_shapes()
+    x_in: np.ndarray             # (S0_cap, F) features of blocks[0].src_nodes
+    labels: np.ndarray           # (B_cap,) int32 (garbage at pads)
+    label_mask: np.ndarray       # (B_cap,) float32 — real owned seeds
+
+
+class DistributedMinibatchSampler:
+    """Splits global seed batches by partition ownership and samples each
+    partition's padded mini-batch with the deterministic fixed-shape
+    expansion, fetching input features through a partition-aware store.
+    """
+
+    def __init__(self, g: Graph, n_parts: int, fanouts: Sequence[int],
+                 batch_cap: int, *, partitioner: str = "hash",
+                 cache_policy: str = "degree", cache_capacity: int = 0,
+                 seed: int = 0,
+                 part: Optional[EdgeCutPartition] = None):
+        self.g = g
+        if part is None:
+            part = make_partition(g, n_parts, partitioner)
+        if not isinstance(part, EdgeCutPartition):
+            raise ValueError("distributed mini-batch training needs an "
+                             "edge-cut partitioner (hash/ldg/fennel)")
+        self.part = part
+        self.n_parts = part.n_parts
+        self.layout: HaloLayout = build_halo(g, part)
+        self.sampler = ServingSampler(g, fanouts, seed=seed)
+        self.fanouts = list(fanouts)
+        self.batch_cap = batch_cap
+        # GCN-style normalization uses the GLOBAL degree (precomputed
+        # D^-1/2 as in DGL), not the in-block src degree: the block src
+        # degree depends on which other seeds share the batch, which would
+        # break partition-invariance
+        self.out_deg = np.maximum(g.out_degree(), 1).astype(np.float32)
+        # the policy ranking is partition-independent: compute it once and
+        # restrict per partition to its ghost set
+        if cache_policy == "none" or cache_capacity <= 0:
+            order = np.zeros(0, np.int64)
+        else:
+            order = CA.CACHE_POLICIES[cache_policy](g, g.num_nodes)
+        self.stores = [
+            PartitionFeatureStore(
+                g, self.layout.owned[p],
+                self._halo_cache_ids(p, order, cache_capacity))
+            for p in range(self.n_parts)]
+
+    def _halo_cache_ids(self, p: int, order: np.ndarray,
+                        capacity: int) -> np.ndarray:
+        """Top-``capacity`` ghost vertices of partition ``p`` under the
+        policy ranking (PaGraph degree / AliGraph importance)."""
+        if not len(order):
+            return np.zeros(0, np.int64)
+        ghost = np.zeros(self.g.num_nodes, bool)
+        ghost[self.layout.halo[p]] = True
+        return order[ghost[order]][:capacity]
+
+    # -- shape contract ----------------------------------------------------
+    def block_shapes(self):
+        """(dst_cap, src_cap, edge_cap) per layer, innermost first —
+        identical for every partition and every batch (one jit entry)."""
+        return self.sampler.block_shapes(self.batch_cap)
+
+    # -- sampling ----------------------------------------------------------
+    def sample_partition(self, p: int, seeds_p: np.ndarray) -> PartitionBatch:
+        seeds_p = np.asarray(seeds_p, np.int64)
+        if len(seeds_p) > self.batch_cap:
+            raise ValueError(f"partition {p} got {len(seeds_p)} seeds "
+                             f"> batch_cap {self.batch_cap}")
+        padded = np.full((self.batch_cap,), -1, np.int64)
+        padded[:len(seeds_p)] = seeds_p
+        mb = self.sampler.sample(padded)
+        # fetch only rows reachable from REAL seeds; pad-path slots get
+        # zero rows and are never counted as traffic
+        need = needed_feature_mask(mb.blocks, padded >= 0)
+        x_in = self.stores[p].fetch_masked(mb.blocks[0].src_nodes, need)
+        safe = np.maximum(padded, 0)
+        labels = (self.g.labels[safe].astype(np.int32)
+                  if self.g.labels is not None
+                  else np.zeros(self.batch_cap, np.int32))
+        mask = (padded >= 0).astype(np.float32)
+        return PartitionBatch(p, padded, mb.blocks, x_in, labels, mask)
+
+    def sample_global(self, seeds: np.ndarray) -> List[PartitionBatch]:
+        """Split a global seed batch by ownership; every partition emits a
+        fixed-shape batch (possibly all-padding)."""
+        seeds = np.asarray(seeds, np.int64)
+        owner = self.layout.owner[seeds]
+        return [self.sample_partition(p, seeds[owner == p])
+                for p in range(self.n_parts)]
+
+    # -- traffic accounting ------------------------------------------------
+    def stats(self) -> dict:
+        hits = sum(s.hits for s in self.stores)
+        misses = sum(s.misses for s in self.stores)
+        return {
+            "halo_hit_ratio": hits / (hits + misses) if hits + misses else 0.0,
+            "cross_partition_bytes": sum(s.transferred_bytes
+                                         for s in self.stores),
+            "local_rows": sum(s.local_rows for s in self.stores),
+            "remote_requests": sum(s.requests for s in self.stores),
+            "ghost_fraction": self.layout.ghost_fraction(),
+        }
+
+
+def device_blocks(batch: PartitionBatch, out_deg: np.ndarray):
+    """Host-side block → DeviceGraph conversion with the GLOBAL-degree
+    normalization the distributed step uses (see class docstring) — the
+    single-device reference path of the equivalence tests."""
+    import dataclasses as _dc
+
+    import jax.numpy as jnp
+
+    from repro.core.abstraction import DeviceGraph
+
+    out = []
+    for b in batch.blocks:
+        dg = DeviceGraph.from_block(b)
+        sdeg = out_deg[np.maximum(b.src_nodes, 0)].astype(np.float32)
+        out.append(_dc.replace(dg, out_deg=jnp.asarray(sdeg)))
+    return out

@@ -111,13 +111,22 @@ def forward_blocks_cached(cfg: GNNConfig, params,
     return logits, h_fresh
 
 
-def nll_loss(logits, labels, mask=None):
+def nll_sum_count(logits, labels, mask):
+    """Masked NLL as an (unnormalized sum, count) pair — the combinable
+    form a distributed step psums across partitions before dividing, so
+    the global mean is identical to the single-device mean regardless of
+    how seeds were split."""
     logz = jax.nn.logsumexp(logits, axis=-1)
     gold = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
     nll = logz - gold
-    if mask is not None:
-        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
-    return jnp.mean(nll)
+    return jnp.sum(nll * mask), jnp.sum(mask)
+
+
+def nll_loss(logits, labels, mask=None):
+    if mask is None:
+        mask = jnp.ones(labels.shape, logits.dtype)
+    total, cnt = nll_sum_count(logits, labels, mask)
+    return total / jnp.maximum(cnt, 1.0)
 
 
 def accuracy(logits, labels, mask=None):

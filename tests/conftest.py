@@ -4,3 +4,46 @@ import sys
 # tests run on the single real CPU device (the 512-device forcing is ONLY
 # inside launch/dryrun.py, per the brief).
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np  # noqa: E402
+import pytest       # noqa: E402
+
+
+def _build_graph(name: str, nodes: int, seed: int):
+    from repro.graph import generators as G
+
+    if name == "er":
+        g = G.erdos_renyi(nodes, 8.0, seed=seed, directed=False)
+        return G.featurize(g, 16, seed=seed, num_classes=4)
+    if name == "sbm":
+        g = G.sbm(nodes, 4, p_in=0.9, p_out=0.02, seed=seed)
+        return G.featurize(g, 16, seed=seed, class_sep=1.5)
+    if name == "reddit-like":
+        from repro.graph.datasets import load
+        return load("reddit-like", seed=seed, scale=nodes / 233_000).graph
+    raise KeyError(f"unknown test graph family {name!r}")
+
+
+@pytest.fixture(scope="session")
+def graph():
+    """Session-scoped ``graph(name, nodes)`` factory for the shared test
+    graphs (SBM community / ER / reddit-like), cached by (name, nodes,
+    seed) so suites stop rebuilding identical graphs.  Module fixtures
+    override this name and call through, e.g.::
+
+        @pytest.fixture(scope="module")
+        def graph(graph):
+            return graph("sbm", 200)
+
+    NOTE: returned graphs are shared across the whole session — tests
+    that mutate features must restore them (see test_serving).
+    """
+    cache = {}
+
+    def factory(name: str, nodes: int, seed: int = 0):
+        key = (name, nodes, seed)
+        if key not in cache:
+            cache[key] = _build_graph(name, nodes, seed)
+        return cache[key]
+
+    return factory

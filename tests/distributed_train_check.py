@@ -1,0 +1,84 @@
+"""Gradient-equivalence check for the distributed mini-batch pipeline —
+run in a subprocess with ``--xla_force_host_platform_device_count=N``.
+
+argv: n_dev partitioner arch
+
+Trains 3 steps with the partition-parallel shard_map step (N devices,
+seeds split by ownership, halo-cached remote fetches) and 3 steps with
+the single-device reference step on the SAME global seed batches, then
+demands every parameter agree to <= 1e-5 — the regression class tier-1
+could not previously catch.
+"""
+import os
+import sys
+
+N_DEV = int(sys.argv[1]) if len(sys.argv) > 1 else 2
+METHOD = sys.argv[2] if len(sys.argv) > 2 else "hash"
+ARCH = sys.argv[3] if len(sys.argv) > 3 else "sage"
+
+os.environ["XLA_FLAGS"] = (
+    f"--xla_force_host_platform_device_count={N_DEV} "
+    + os.environ.get("XLA_FLAGS", ""))
+
+import jax                                              # noqa: E402
+import jax.numpy as jnp                                 # noqa: E402
+import numpy as np                                      # noqa: E402
+
+from repro.distributed import (DistributedMinibatchSampler,   # noqa: E402
+                               collate, device_blocks,
+                               make_distributed_minibatch_step)
+from repro.graph import generators as G                 # noqa: E402
+from repro.models.gnn import model as GM                # noqa: E402
+from repro.models.gnn.model import GNNConfig            # noqa: E402
+from repro.optim import AdamW                           # noqa: E402
+
+assert jax.device_count() == N_DEV, jax.device_count()
+
+g = G.sbm(144, 4, p_in=0.9, p_out=0.02, seed=0)
+g = G.featurize(g, 16, seed=0, class_sep=1.5)
+
+cfg = GNNConfig(arch=ARCH, feat_dim=16, hidden=32, num_classes=4)
+params0 = GM.init_gnn(cfg, jax.random.PRNGKey(0))
+opt = AdamW(lr=1e-2, weight_decay=0.0)
+
+B, FANOUTS, STEPS = 24, [3, 3], 3
+
+dist = DistributedMinibatchSampler(
+    g, N_DEV, FANOUTS, B, partitioner=METHOD, cache_policy="degree",
+    cache_capacity=g.num_nodes // 10, seed=0)
+mesh, dstep = make_distributed_minibatch_step(cfg, opt, N_DEV,
+                                              dist.block_shapes())
+
+# reference: ONE partition (everything owned/local) -> the deterministic
+# sampler emits the identical per-seed trees; step is the plain
+# single-device mini-batch trainer
+ref = DistributedMinibatchSampler(g, 1, FANOUTS, B, partitioner="hash",
+                                  cache_policy="none", seed=0)
+ref_step = jax.jit(GM.make_minibatch_train_step(cfg, opt))
+
+pd, od = params0, opt.init(params0)
+pr, orr = jax.tree.map(lambda a: a, params0), opt.init(params0)
+
+rng = np.random.default_rng(1)
+for it in range(STEPS):
+    seeds = rng.choice(g.num_nodes, B, replace=False)
+    arrays = collate(dist.sample_global(seeds), dist.out_deg)
+    pd, od, loss_d = dstep(pd, od, arrays)
+
+    rb = ref.sample_global(seeds)[0]
+    pr, orr, loss_r = ref_step(
+        pr, orr, device_blocks(rb, ref.out_deg), jnp.asarray(rb.x_in),
+        jnp.asarray(rb.labels), jnp.asarray(rb.label_mask))
+    dl = abs(float(loss_d) - float(loss_r))
+    assert dl < 1e-5, (it, float(loss_d), float(loss_r))
+
+diffs = jax.tree.map(
+    lambda a, b: float(jnp.max(jnp.abs(a - b))), pd, pr)
+maxdiff = max(jax.tree_util.tree_leaves(diffs))
+assert maxdiff <= 1e-5, (maxdiff, diffs)
+
+stats = dist.stats()
+assert stats["cross_partition_bytes"] > 0   # remote traffic really flowed
+print(f"PASS dist-equivalence n_dev={N_DEV} part={METHOD} arch={ARCH} "
+      f"maxdiff={maxdiff:.2e} halo_hit={stats['halo_hit_ratio']:.2f} "
+      f"xpart_kib={stats['cross_partition_bytes'] / 1024:.1f}")

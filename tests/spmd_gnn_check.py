@@ -96,14 +96,24 @@ for _ in range(10):
     params, ostate, loss = dstep(params, ostate, sg)
     dlosses.append(float(loss))
 
-_, rlosses = ref_train(10)
+rparams, rlosses = ref_train(10)
 # fp32 reduction-order differences compound through AdamW: demand tight
 # agreement early, relative agreement late.
 early = max(abs(a - b) for a, b in zip(dlosses[:4], rlosses[:4]))
 late = abs(dlosses[-1] - rlosses[-1]) / rlosses[-1]
 assert early < 1e-4, (dlosses, rlosses)
-assert late < 0.05, (dlosses, rlosses)
-print(f"PASS pull-equivalence early={early:.2e} late_rel={late:.3f}")
+assert late < 0.01, (dlosses, rlosses)
+# parameter-level equivalence after 10 steps: the guard for gradient
+# scaling bugs (e.g. psum inside loss_fn under check_rep=False multiplies
+# grads by n_dev) that Adam's scale-invariance + clipping hide from the
+# EARLY loss trajectory entirely and leave late_rel at only ~0.04
+pdiff = max(
+    float(jnp.max(jnp.abs(a - b)))
+    for a, b in zip(jax.tree_util.tree_leaves(params),
+                    jax.tree_util.tree_leaves(rparams)))
+assert pdiff < 1e-4, pdiff
+print(f"PASS pull-equivalence early={early:.2e} late_rel={late:.3f} "
+      f"pdiff={pdiff:.2e}")
 
 # --- stale mode: refresh halo every 3 steps -------------------------------
 mesh, sstep = PR.make_distributed_gcn_step(opt, N_DEV, mode="stale")

@@ -7,7 +7,6 @@ import pytest
 
 from repro.core import sampling as S
 from repro.core.abstraction import DeviceGraph, saga_layer, segment_softmax
-from repro.graph import generators as G
 from repro.models.gnn import model as GM
 from repro.models.gnn.layers import LAYER_TYPES
 from repro.models.gnn.model import GNNConfig
@@ -15,9 +14,8 @@ from repro.optim import AdamW
 
 
 @pytest.fixture(scope="module")
-def sbm_graph():
-    g = G.sbm(240, 4, p_in=0.9, p_out=0.02, seed=0)
-    return G.featurize(g, 16, seed=0, class_sep=1.5)
+def sbm_graph(graph):
+    return graph("sbm", 240)
 
 
 @pytest.mark.parametrize("arch", ["gcn", "sage", "gat", "gin", "ggnn",

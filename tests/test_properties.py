@@ -128,3 +128,85 @@ def test_device_graph_degrees_match(seed):
     dg = DeviceGraph.from_graph(g)
     np.testing.assert_array_equal(
         np.asarray(dg.in_deg), np.maximum(g.in_degree(), 1))
+
+
+# ---------------------------------------------------------------------------
+# halo layer invariants (core/halo.py)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(20, 120), p=st.integers(2, 5),
+       method=st.sampled_from(["hash", "ldg"]), seed=st.integers(0, 30))
+def test_halo_every_endpoint_owned_or_ghost(n, p, method, seed):
+    """For every partition, every endpoint of every edge touching it is
+    either owned by it or in its halo (ghost) set."""
+    from repro.core import partitioning as PT
+    from repro.core.halo import build_halo
+    g = G.erdos_renyi(n, 4.0, seed=seed, directed=False)
+    part = PT.partition(g, p, method)
+    lay = build_halo(g, part)
+    e = g.edges()
+    for q in range(p):
+        present = np.zeros(n, bool)
+        present[lay.owned[q]] = True
+        present[lay.halo[q]] = True
+        touches = (lay.owner[e[:, 0]] == q) | (lay.owner[e[:, 1]] == q)
+        assert present[e[touches]].all()
+        assert not np.intersect1d(lay.owned[q], lay.halo[q]).size
+        # halo_in/halo_out partition the ghost set by fetch direction
+        np.testing.assert_array_equal(
+            lay.halo[q], np.union1d(lay.halo_in[q], lay.halo_out[q]))
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.integers(20, 100), p=st.integers(2, 4), seed=st.integers(0, 20))
+def test_halo_exchange_round_trips_features(n, p, seed):
+    """Fixed-shape gather/scatter through the exchange indices reproduces
+    every ghost feature row exactly."""
+    from repro.core import partitioning as PT
+    from repro.core.halo import build_halo
+    g = G.erdos_renyi(n, 5.0, seed=seed, directed=False)
+    g = G.featurize(g, 8, seed=seed, num_classes=3)
+    lay = build_halo(g, PT.partition(g, p, "hash"))
+    gathered = lay.gather_halo(g.features)
+    assert gathered.shape == (p, lay.halo_cap, 8)
+    for q in range(p):
+        np.testing.assert_array_equal(gathered[q][lay.halo_mask[q]],
+                                      g.features[lay.halo[q]])
+        # pad slots stay zero (never alias a real vertex)
+        assert not gathered[q][~lay.halo_mask[q]].any()
+    back = lay.scatter_halo(gathered, 8)
+    ghosts = np.unique(lay.halo_idx[lay.halo_mask])
+    np.testing.assert_array_equal(back[ghosts], g.features[ghosts])
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 50), fill=st.integers(0, 8))
+def test_padded_rows_never_leak_into_aggregation(seed, fill):
+    """Garbage in a padded block's pad-slot feature rows must not change
+    any valid destination's output (the masking contract the distributed
+    mini-batch step relies on)."""
+    from repro.core.sampling import sample_block_padded
+    from repro.models.gnn.layers import SAGELayer
+    g = G.erdos_renyi(60, 5.0, seed=seed, directed=False)
+    gr = g.reverse()
+    rng = np.random.default_rng(seed)
+    dst = np.full(8, -1, np.int64)
+    if fill:
+        dst[:fill] = rng.choice(g.num_nodes, fill, replace=False)
+
+    def rng_for(node):
+        return np.random.default_rng((seed, node))
+
+    b = sample_block_padded(g, gr, dst, 3, rng_for)
+    dg = DeviceGraph.from_block(b)
+    x = rng.normal(size=(b.num_src, 6)).astype(np.float32)
+    poisoned = x.copy()
+    poisoned[np.asarray(b.src_nodes) < 0] = 1e9
+    layer = SAGELayer()
+    p = SAGELayer.init(jax.random.PRNGKey(0), 6, 5)
+    clean = np.asarray(layer(p, dg, jnp.asarray(x)))
+    dirty = np.asarray(layer(p, dg, jnp.asarray(poisoned)))
+    valid = np.asarray(b.dst_nodes) >= 0
+    np.testing.assert_allclose(dirty[valid], clean[valid],
+                               rtol=1e-5, atol=1e-5)

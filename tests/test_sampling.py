@@ -7,13 +7,11 @@ pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import sampling as S
-from repro.graph import generators as G
 
 
 @pytest.fixture(scope="module")
-def graph():
-    g = G.erdos_renyi(300, 8.0, seed=0, directed=False)
-    return G.featurize(g, 16, seed=0, num_classes=4)
+def graph(graph):
+    return graph("er", 300)
 
 
 def _check_block_invariants(b: S.Block):

@@ -8,7 +8,6 @@ import numpy as np
 import pytest
 
 from repro.core.sampling import sample_block_padded
-from repro.graph import generators as G
 from repro.models.gnn import model as GM
 from repro.models.gnn.model import GNNConfig
 from repro.serving import (BucketedBatcher, EmbeddingCache,
@@ -22,9 +21,8 @@ FANOUTS = (3, 3)
 
 
 @pytest.fixture(scope="module")
-def graph():
-    g = G.sbm(200, 4, p_in=0.9, p_out=0.02, seed=0)
-    return G.featurize(g, 16, seed=0, class_sep=1.5)
+def graph(graph):
+    return graph("sbm", 200)
 
 
 @pytest.fixture(scope="module")
@@ -242,6 +240,23 @@ def test_capacity_zero_admits_nothing(graph):
     full = EmbeddingCache(graph, [8], policy="degree")   # None = unbounded
     full.store(0, ids, np.ones((3, 8), np.float32), np.ones(3, bool))
     assert full.lookup(0, ids)[1].all()
+
+
+def test_fetch_masked_all_false_transfers_nothing(graph):
+    """Regression: a fetch_masked call whose ``needed`` mask selects no
+    rows must add 0 bytes — no per-RPC header, no hits/misses."""
+    from repro.core.caching import HEADER_BYTES, FeatureStore
+    store = FeatureStore(graph, np.zeros(0, np.int64))
+    ids = np.asarray([1, 2, -1])
+    out = store.fetch_masked(ids, np.zeros(3, bool))
+    assert store.transferred_bytes == 0
+    assert (store.hits, store.misses, store.requests) == (0, 0, 0)
+    assert not out.any()                         # zero rows, static shape
+    # a call that does transfer pays exactly rows + one header; the -1
+    # pad slot is ignored even when marked needed
+    store.fetch_masked(ids, np.asarray([True, False, True]))
+    assert store.misses == 1
+    assert store.transferred_bytes == store.bytes_per_row + HEADER_BYTES
 
 
 def test_staleness_bound_and_invalidation(graph):
