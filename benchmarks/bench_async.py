@@ -1,0 +1,129 @@
+"""Staleness-bounded asynchronous full-graph training bench (survey
+§3.2.7: "the zero-/delayed-communication strategies are fastest with
+slight accuracy fluctuation").
+
+Sweeps the staleness bound S ∈ {0, 1, 2} on er / sbm / reddit-like graphs
+(2 forced host devices, subprocess so the device count can be set before
+jax initializes) and records, per (graph, S):
+
+* ``step_ms``        — mean wall time per training step (post-warmup);
+* ``bytes_per_step`` — cross-partition ghost-refresh traffic (payload +
+  per-RPC headers, consumed-plan accounting);
+* ``accuracy`` / ``accuracy_gap`` — final full-graph accuracy and its gap
+  vs the S=0 (synchronous) run from the same init;
+* ``comm_savings``   — fraction of the synchronous exchange volume saved.
+
+Results land in ``BENCH_async.json`` at the repo root (see
+docs/benchmarks.md for the field glossary) and are also emitted as the
+usual ``name,us,derived`` CSV lines.  The acceptance invariant —
+bytes/step strictly decreasing as S grows on the reddit-like graph — is
+asserted here, not just reported.
+"""
+import json
+import os
+import subprocess
+import sys
+
+from benchmarks.common import ROOT, SRC, emit
+
+GRAPHS = ("er", "sbm", "reddit-like")
+STALENESS = (0, 1, 2)
+DEVICES = 2
+EPOCHS = 12
+REFRESH_FRAC = 0.05
+
+
+def _payload() -> None:
+    """Runs inside the forced-device subprocess; prints one JSON blob."""
+    import numpy as np
+
+    from repro.distributed import AsyncFullGraphTrainer
+    from repro.graph import generators as G
+    from repro.models.gnn import model as GM
+    from repro.models.gnn.model import GNNConfig
+    from repro.optim import AdamW
+
+    import jax
+
+    def build(name):
+        if name == "er":
+            g = G.erdos_renyi(256, 8.0, seed=0, directed=False)
+            return G.featurize(g, 16, seed=0, num_classes=4)
+        if name == "sbm":
+            g = G.sbm(256, 4, p_in=0.9, p_out=0.02, seed=0)
+            return G.featurize(g, 16, seed=0, class_sep=1.5)
+        from repro.graph.datasets import load
+        return load("reddit-like", seed=0, scale=800 / 233_000).graph
+
+    out = {}
+    for name in GRAPHS:
+        g = build(name)
+        cfg = GNNConfig(arch="gcn", feat_dim=g.features.shape[1],
+                        hidden=32, num_classes=g.num_classes)
+        params0 = GM.init_gnn(cfg, jax.random.PRNGKey(0))
+        opt = AdamW(lr=1e-2, weight_decay=0.0)
+        rows = {}
+        for s in STALENESS:
+            tr = AsyncFullGraphTrainer(g, cfg, opt, DEVICES,
+                                       partitioner="hash", staleness=s,
+                                       refresh_frac=REFRESH_FRAC)
+            p, _, loss = tr.run(params0, opt.init(params0), EPOCHS)
+            st = tr.stats()
+            # drop the compile step from timing
+            times = tr.step_times_s[1:] or tr.step_times_s
+            rows[str(s)] = {
+                "loss": loss,
+                "accuracy": tr.accuracy(p),
+                "step_ms": 1e3 * sum(times) / len(times),
+                "bytes_per_step": st["bytes_per_step"],
+                "sync_bytes_per_step": st["sync_bytes_per_step"],
+                "comm_savings": st["comm_savings"],
+                "ghost_rows": st["ghost_rows"],
+            }
+        acc0 = rows["0"]["accuracy"]
+        for s in STALENESS:
+            rows[str(s)]["accuracy_gap"] = acc0 - rows[str(s)]["accuracy"]
+        out[name] = rows
+        assert np.isfinite([r["loss"] for r in rows.values()]).all()
+    b = [out["reddit-like"][str(s)]["bytes_per_step"] for s in STALENESS]
+    assert b[0] > b[1] > b[2], f"bytes/step not strictly decreasing: {b}"
+    print("ASYNC_JSON " + json.dumps(out))
+
+
+def main() -> None:
+    env = dict(os.environ)
+    # the payload re-imports this module, so it needs ROOT (for
+    # ``benchmarks.common``) as well as SRC on the path
+    env["PYTHONPATH"] = SRC + os.pathsep + ROOT
+    env["XLA_FLAGS"] = (
+        f"--xla_force_host_platform_device_count={DEVICES}")
+    r = subprocess.run(
+        [sys.executable, os.path.abspath(__file__), "--payload"],
+        capture_output=True, text=True, timeout=1200, env=env)
+    blob = next((ln for ln in r.stdout.splitlines()
+                 if ln.startswith("ASYNC_JSON ")), None)
+    if r.returncode != 0 or blob is None:
+        print(f"async/SUBPROCESS_FAILED,0.0,"
+              f"err={r.stderr[-200:].replace(chr(10), ' ')}")
+        return
+    results = json.loads(blob[len("ASYNC_JSON "):])
+    path = os.path.join(ROOT, "BENCH_async.json")
+    with open(path, "w") as f:
+        json.dump({"devices": DEVICES, "epochs": EPOCHS,
+                   "refresh_frac": REFRESH_FRAC, "results": results},
+                  f, indent=2, sort_keys=True)
+    for name, rows in results.items():
+        for s, row in sorted(rows.items()):
+            emit(f"async/{name}_S{s}", row["step_ms"] * 1e3,
+                 f"bytes_step={row['bytes_per_step']:.0f}"
+                 f";acc={row['accuracy']:.3f}"
+                 f";acc_gap={row['accuracy_gap']:.3f}"
+                 f";saved={row['comm_savings']:.1%}")
+    print(f"async/BENCH_async_json,0.0,path={os.path.relpath(path, ROOT)}")
+
+
+if __name__ == "__main__":
+    if "--payload" in sys.argv:
+        _payload()
+    else:
+        main()

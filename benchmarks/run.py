@@ -13,14 +13,17 @@ Prints ``name,us_per_call,derived`` CSV.  Module map:
   bench_kernels       — Pallas kernels vs oracles
   bench_roofline      — deliverable (g): roofline terms from the dry-run
   bench_serving       — online inference: cache hierarchy vs no-cache
+  bench_async         — §3.2.7 staleness-bounded async full-graph training
+                        (writes BENCH_async.json)
 """
 import sys
 import traceback
 
-from benchmarks import (bench_abstraction, bench_caching, bench_datasets,
-                        bench_distributed, bench_kernels, bench_partitioning,
-                        bench_performance, bench_roofline, bench_sampling,
-                        bench_scheduling, bench_serving)
+from benchmarks import (bench_abstraction, bench_async, bench_caching,
+                        bench_datasets, bench_distributed, bench_kernels,
+                        bench_partitioning, bench_performance,
+                        bench_roofline, bench_sampling, bench_scheduling,
+                        bench_serving)
 
 MODULES = [
     ("partitioning", bench_partitioning),
@@ -34,6 +37,7 @@ MODULES = [
     ("distributed", bench_distributed),
     ("roofline", bench_roofline),
     ("serving", bench_serving),
+    ("async", bench_async),
 ]
 
 

@@ -1,9 +1,16 @@
-"""Distributed full-graph GNN training demo (the paper's core scenario):
-8 (forced host) devices, selectable partitioner, pull vs stale (DistGNN)
-synchronization — run as a self-contained script so the device count can
-be forced before jax initializes.
+"""Distributed GNN training demo (the paper's core scenario), driving
+``repro.launch.train_gnn`` across the system families in
+``repro.distributed`` and ``repro.core.propagation``: synchronous
+full-graph (pull mode, selectable partitioner), epoch-level stale
+snapshots (DistGNN), staleness-bounded asynchronous full-graph
+(``--fullgraph``: versioned ghost buffers + refresh budget), and
+partition-parallel mini-batch (halo-cached remote fetches, shard_map
+psum step).  Each run is a subprocess so the forced host-device count
+can be set before jax initializes.
 
   PYTHONPATH=src python examples/distributed_gnn.py
+
+See docs/architecture.md for the dataflow of each mode.
 """
 import os
 import subprocess
@@ -18,6 +25,10 @@ runs = [
      "--epochs", "15"],
     ["--devices", "8", "--partitioner", "ldg", "--mode", "stale",
      "--staleness", "4", "--epochs", "15"],
+    ["--fullgraph", "--devices", "4", "--partitioner", "ldg",
+     "--staleness", "2", "--refresh-frac", "0.05", "--epochs", "15"],
+    ["--minibatch", "--devices", "4", "--partitioner", "ldg",
+     "--cache", "degree", "--arch", "sage", "--epochs", "2"],
 ]
 
 for extra in runs:

@@ -1,0 +1,123 @@
+"""Docs tier: fail on broken intra-repo markdown links and on exported
+public-API symbols missing docstrings.
+
+Stdlib-only so it can run anywhere the repo checks out:
+
+* **links** — every relative ``[text](target)`` in a tracked ``*.md``
+  must resolve to an existing file/directory (http(s)/mailto and pure
+  ``#anchor`` links are skipped; ``path#fragment`` checks the path part);
+* **docstrings** — every name in ``repro.distributed.__all__`` and
+  ``repro.serving.__all__``, plus every public top-level class/function
+  defined in ``repro.core.{halo,caching,propagation}``, must carry a
+  non-trivial docstring (public dataclasses whose semantics live in the
+  module docstring still need at least a summary line).
+
+Run directly or via ``scripts/run_tests.sh docs``.
+"""
+from __future__ import annotations
+
+import inspect
+import os
+import re
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(ROOT, "src"))
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+SKIP_DIRS = {".git", "__pycache__", ".pytest_cache", "node_modules"}
+
+EXPORT_MODULES = ["repro.distributed", "repro.serving"]
+CORE_MODULES = ["repro.core.halo", "repro.core.caching",
+                "repro.core.propagation"]
+
+
+def markdown_files() -> list:
+    out = []
+    for dirpath, dirnames, filenames in os.walk(ROOT):
+        dirnames[:] = [d for d in dirnames if d not in SKIP_DIRS]
+        out.extend(os.path.join(dirpath, f) for f in filenames
+                   if f.endswith(".md"))
+    return sorted(out)
+
+
+def check_links() -> list:
+    problems = []
+    for md in markdown_files():
+        with open(md, encoding="utf-8") as f:
+            text = f.read()
+        # fenced code blocks may contain bracketed pseudo-links; drop them
+        text = re.sub(r"```.*?```", "", text, flags=re.S)
+        for target in LINK_RE.findall(text):
+            if target.startswith(("http://", "https://", "mailto:")):
+                continue
+            path = target.split("#", 1)[0]
+            if not path:                       # pure in-page anchor
+                continue
+            resolved = os.path.normpath(
+                os.path.join(os.path.dirname(md), path))
+            if not os.path.exists(resolved):
+                problems.append(f"{os.path.relpath(md, ROOT)}: broken "
+                                f"link -> {target}")
+    return problems
+
+
+def _has_doc(obj) -> bool:
+    doc = inspect.getdoc(obj)
+    if not doc or not doc.strip():
+        return False
+    # dataclasses synthesize "Name(field: type, ...)" — that is a
+    # signature, not documentation
+    name = getattr(obj, "__name__", None)
+    if name and doc.startswith(f"{name}(") and doc.endswith(")"):
+        return False
+    return True
+
+
+def check_docstrings() -> list:
+    import importlib
+
+    problems = []
+    for name in EXPORT_MODULES:
+        mod = importlib.import_module(name)
+        if not _has_doc(mod):
+            problems.append(f"{name}: module missing docstring")
+        for sym in getattr(mod, "__all__", []):
+            obj = getattr(mod, sym)
+            if not _has_doc(obj):
+                problems.append(f"{name}.{sym}: exported symbol missing "
+                                f"docstring")
+    for name in CORE_MODULES:
+        mod = importlib.import_module(name)
+        if not _has_doc(mod):
+            problems.append(f"{name}: module missing docstring")
+        for sym, obj in vars(mod).items():
+            if sym.startswith("_"):
+                continue
+            if not (inspect.isclass(obj) or inspect.isfunction(obj)):
+                continue
+            if getattr(obj, "__module__", None) != name:
+                continue                       # re-exported, checked at home
+            if not _has_doc(obj):
+                problems.append(f"{name}.{sym}: public symbol missing "
+                                f"docstring")
+    return problems
+
+
+def main() -> int:
+    problems = check_links() + check_docstrings()
+    for p in problems:
+        print(f"DOCS FAIL {p}")
+    n_md = len(markdown_files())
+    if problems:
+        print(f"check_docs: {len(problems)} problem(s) across {n_md} "
+              f"markdown files + {len(EXPORT_MODULES + CORE_MODULES)} "
+              f"modules")
+        return 1
+    print(f"check_docs OK: {n_md} markdown files, "
+          f"{len(EXPORT_MODULES + CORE_MODULES)} modules")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,4 +1,12 @@
-"""Dev harness: forward + train + prefill/decode for every reduced config."""
+"""Dev harness: forward + train + prefill/decode for every reduced config,
+plus the GNN serving / distributed-training / docs stages.
+
+Run all stages with no arguments, or name a subset::
+
+    PYTHONPATH=src python scripts/dev_smoke.py
+    PYTHONPATH=src python scripts/dev_smoke.py gemma_7b serve_gnn
+    PYTHONPATH=src python scripts/dev_smoke.py --help     # list stages
+"""
 import sys
 
 import jax
@@ -10,11 +18,26 @@ from repro.data.pipeline import input_specs
 from repro.models.transformer import model as M
 from repro.optim import AdamW
 
+EXTRA_STAGES = {
+    "serve_gnn": "online GNN inference serving smoke (repro.serving)",
+    "dist_gnn": "2-device mini-batch gradient-equivalence subprocess",
+    "docs": "markdown links + public-API docstrings (scripts/check_docs.py)",
+}
+
+if any(a in ("-h", "--help") for a in sys.argv[1:]):
+    print(__doc__.strip())
+    print("\nstages (default: all):")
+    for a in ARCH_IDS:
+        print(f"  {a:24s} reduced-config forward/train/prefill/decode")
+    for name, desc in EXTRA_STAGES.items():
+        print(f"  {name:24s} {desc}")
+    sys.exit(0)
+
 ONLY = sys.argv[1:] if len(sys.argv) > 1 else None
 RUN_SERVING = ONLY is None or "serve_gnn" in ONLY
 RUN_DIST = ONLY is None or "dist_gnn" in ONLY
-ARCHES = [a for a in (ONLY or ARCH_IDS)
-          if a not in ("serve_gnn", "dist_gnn")]
+RUN_DOCS = ONLY is None or "docs" in ONLY
+ARCHES = [a for a in (ONLY or ARCH_IDS) if a not in EXTRA_STAGES]
 
 
 def concrete_batch(cfg, B, S, kind, key):
@@ -128,4 +151,17 @@ if RUN_DIST:
     assert r.returncode == 0, r.stdout + r.stderr
     assert "PASS dist-equivalence" in r.stdout, r.stdout
     print(f"OK {'dist_gnn':24s} {r.stdout.strip().splitlines()[-1]}")
+
+if RUN_DOCS:
+    # docs tier: intra-repo markdown links resolve and every exported
+    # repro.distributed / repro.serving / core symbol has a docstring
+    import os
+    import subprocess
+
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    r = subprocess.run(
+        [sys.executable, os.path.join(root, "scripts", "check_docs.py")],
+        capture_output=True, text=True, timeout=300)
+    assert r.returncode == 0, r.stdout + r.stderr
+    print(f"OK {'docs':24s} {r.stdout.strip().splitlines()[-1]}")
 print("ALL OK")

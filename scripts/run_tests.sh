@@ -4,6 +4,8 @@
 #   scripts/run_tests.sh            # tier1: the default fast suite
 #   scripts/run_tests.sh tier2      # slow + distributed matrix (subprocess,
 #                                   # forced multi-device)
+#   scripts/run_tests.sh docs       # intra-repo markdown links + public-API
+#                                   # docstrings (scripts/check_docs.py)
 #   scripts/run_tests.sh all        # everything
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -14,6 +16,7 @@ shift || true
 case "$tier" in
   tier1) exec python -m pytest -q -m "not slow and not distributed" "$@" ;;
   tier2) exec python -m pytest -q -m "slow or distributed" "$@" ;;
+  docs)  exec python scripts/check_docs.py "$@" ;;
   all)   exec python -m pytest -q "$@" ;;
-  *) echo "usage: $0 [tier1|tier2|all] [pytest args...]" >&2; exit 2 ;;
+  *) echo "usage: $0 [tier1|tier2|docs|all] [pytest args...]" >&2; exit 2 ;;
 esac

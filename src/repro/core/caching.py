@@ -1,24 +1,33 @@
 """Feature caching / inter-process communication policies (survey §3.2.4,
-Table 6).
+Table 6) plus the shared bounded-staleness version clock.
 
 The surveyed systems cut host→device (PaGraph) or remote-machine (AliGraph)
 feature traffic by caching features of vertices likely to be touched:
 
-* :class:`DegreeCache` — PaGraph: pre-sort by out-degree, fill the cache
+* :func:`degree_cache` — PaGraph: pre-sort by out-degree, fill the cache
   top-down ("a higher out-degree vertex is an in-neighbor of more nodes,
   hence sampled more often").
-* :class:`ImportanceCache` — AliGraph: cache vertices whose importance
+* :func:`importance_cache` — AliGraph: cache vertices whose importance
   (k-hop in/out-neighbor ratio) exceeds a threshold.
-* :class:`NoCache` — baseline.
+* :func:`no_cache` — baseline.
 
 ``FeatureStore`` plays the role of DistDGL's KVStore: a global store that
 serves features and counts the bytes that would cross the interconnect —
 the quantity the caching claims in EXPERIMENTS.md §Paper-validation are
 measured on.
+
+:class:`VersionClock` / :class:`VersionedBuffer` are the *one* staleness
+implementation in the repo: the serving
+:class:`~repro.serving.cache.EmbeddingCache` (GNNAutoScale historical
+embeddings at inference time) and the training
+:class:`~repro.core.halo.HaloExchange` (staleness-bounded asynchronous
+full-graph halos) both read and write through them, so "an entry written
+at clock ``v`` may be served while ``clock - v <= max_staleness``" means
+exactly the same thing on both paths.
 """
 from __future__ import annotations
 
-from typing import Iterable
+from typing import Iterable, Optional
 
 import numpy as np
 
@@ -29,9 +38,93 @@ from repro.graph.structure import Graph
 # actually moves rows, never for calls fully served locally/from cache
 HEADER_BYTES = 64
 
+# sentinel version for "never written"; large-negative (not int64 min) so
+# computing ``clock - NEVER`` cannot overflow int64
+NEVER = -(2 ** 62)
+
+
+class VersionClock:
+    """A global integer clock shared by every staleness-bounded buffer.
+
+    One :meth:`tick` ≈ one refresh epoch (a serving feature/model refresh,
+    or one asynchronous full-graph training step).  Buffers attached to
+    the same clock age together — the property the cross-subsystem
+    staleness tests key off.
+    """
+
+    def __init__(self) -> None:
+        self.now = 0
+
+    def tick(self, n: int = 1) -> None:
+        """Advance the clock by ``n`` epochs (``n >= 1``)."""
+        self.now += int(n)
+
+
+class VersionedBuffer:
+    """One plane of values with a per-row version under a shared clock.
+
+    Args:
+        clock: the shared :class:`VersionClock` this plane ages against.
+        rows:  number of value rows (fixed; shapes never change).
+        dim:   feature width of each row.
+        dtype: row dtype (default float32).
+
+    Invariants:
+        * a row written at clock ``v`` has age ``clock.now - v``;
+        * :meth:`fresh_mask` marks rows with ``age <= max_staleness`` —
+          never-written rows (version ``NEVER``) are never fresh;
+        * :meth:`write` stamps rows with the *current* clock value.
+    """
+
+    def __init__(self, clock: VersionClock, rows: int, dim: int,
+                 dtype=np.float32) -> None:
+        self.clock = clock
+        self.values = np.zeros((rows, dim), dtype)
+        self.version = np.full(rows, NEVER, np.int64)
+
+    @property
+    def rows(self) -> int:
+        return len(self.version)
+
+    def age(self, rows: Optional[np.ndarray] = None) -> np.ndarray:
+        """Per-row staleness ``clock.now - version`` (huge for never-written
+        rows).  ``rows`` selects a subset; default is every row."""
+        v = self.version if rows is None else self.version[rows]
+        return self.clock.now - v
+
+    def fresh_mask(self, max_staleness: int,
+                   rows: Optional[np.ndarray] = None) -> np.ndarray:
+        """Bounded-staleness read predicate: True where the row may be
+        served without violating the bound."""
+        return self.age(rows) <= max_staleness
+
+    def write(self, rows: np.ndarray, values: np.ndarray) -> None:
+        """Store ``values`` at ``rows`` and stamp them with the current
+        clock (``rows`` may be an index array or a boolean mask)."""
+        self.values[rows] = values
+        self.version[rows] = self.clock.now
+
+    def invalidate(self, rows: np.ndarray) -> None:
+        """Mark rows never-written: they fail every staleness bound until
+        the next :meth:`write` (inputs changed ⇒ history is wrong at any
+        staleness)."""
+        self.version[rows] = NEVER
+
 
 class FeatureStore:
-    """Global feature server + device-side cache with traffic accounting."""
+    """Global feature server + device-side cache with traffic accounting.
+
+    Args:
+        g: graph whose ``features`` are served (``(N, F)`` float32; a
+            feature-less graph serves row ids instead).
+        cache_ids: node ids admitted to the device-side cache (hits are
+            free; misses are charged ``bytes_per_row`` each plus one
+            ``HEADER_BYTES`` envelope per fetch call that moves rows).
+
+    Shape convention: :meth:`fetch_masked` is slot-aligned over padded id
+    vectors (``-1`` = pad slot) and returns zero rows at unneeded slots,
+    so batch shapes stay static and pad rows can never aggregate.
+    """
 
     def __init__(self, g: Graph, cache_ids: np.ndarray):
         self.g = g
@@ -96,6 +189,7 @@ class FeatureStore:
 
 
 def no_cache(g: Graph, capacity: int) -> np.ndarray:
+    """Baseline policy: admit nothing (every remote row is traffic)."""
     return np.zeros(0, np.int64)
 
 
@@ -117,6 +211,8 @@ def importance_cache(g: Graph, capacity: int, *, hops: int = 1) -> np.ndarray:
 
 
 def random_cache(g: Graph, capacity: int, *, seed: int = 0) -> np.ndarray:
+    """Uniform-random admission — the control the policy claims are
+    measured against."""
     rng = np.random.default_rng(seed)
     return rng.choice(g.num_nodes, min(capacity, g.num_nodes), replace=False)
 

@@ -15,20 +15,42 @@ fixed-shape exchange index arrays (every partition's halo list padded to
 one common cap) so a halo feature exchange is a single static-shape
 gather per partition — the jit-stable layout the shard_map training step
 and the halo FeatureStore cache both key off.
+
+:class:`HaloExchange` layers *versioned per-layer ghost buffers* on top of
+a :class:`HaloLayout`: the historical-embedding idea (GNNAutoScale /
+PipeGCN / DistGNN's delayed aggregates, survey §3.2.7) applied to
+full-graph training.  Each layer's ghost activations live in a
+:class:`~repro.core.caching.VersionedBuffer` under the shared
+:class:`~repro.core.caching.VersionClock`; a refresh *plan* per step picks
+which ghost rows are exchanged synchronously (every row whose staleness
+would exceed the bound, plus a budgeted fraction of the oldest rest) and
+charges exactly those rows as cross-partition traffic.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import List
+from typing import List, Optional, Sequence
 
 import numpy as np
 
+from repro.core.caching import (HEADER_BYTES, VersionClock, VersionedBuffer)
 from repro.core.partitioning import EdgeCutPartition
 from repro.graph.structure import Graph
 
 
 @dataclasses.dataclass
 class HaloLayout:
+    """Per-partition ownership + ghost layout of an edge-cut partition.
+
+    ``owner`` maps every vertex to its partition; per partition ``p``,
+    ``owned[p]`` are its vertices and ``halo[p] = halo_in[p] ∪
+    halo_out[p]`` its ghosts (remote endpoints of cut edges, split by
+    fetch direction).  ``halo_idx``/``halo_mask`` are the fixed-shape
+    exchange indices: every partition's ghost list padded to one common
+    ``halo_cap`` (``-1`` pads, mask marks validity) so a halo exchange is
+    one static-shape gather per partition — pad slots stay zero and never
+    alias a real vertex.
+    """
     n_parts: int
     owner: np.ndarray            # (N,) vertex -> owning partition
     owned: List[np.ndarray]      # per-partition owned vertex ids (sorted)
@@ -104,3 +126,192 @@ def build_halo(g: Graph, part: EdgeCutPartition) -> HaloLayout:
         halo_mask[p, :len(h)] = True
     return HaloLayout(part.n_parts, owner, owned, halo_in, halo_out, halo,
                       halo_idx, halo_mask)
+
+
+# ---------------------------------------------------------------------------
+# versioned ghost buffers: staleness-bounded asynchronous halo exchange
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class RefreshPlan:
+    """One training step's ghost-refresh decision.
+
+    Attributes:
+        step:  the clock value this plan serves (the step index).
+        masks: per-layer ``(n_rows,)`` bool — rows exchanged *synchronously*
+               this step (they carry current-step values and gradients);
+               every other ghost row is served stale from its buffer.
+        rows_moved:   Σ over layers of refreshed ghost *copies* (a row
+               ghosted by k partitions is sent k times).
+        payload_bytes: rows_moved × row width × element size.
+        header_bytes:  one per-RPC header per (partition, layer) that pulls
+               at least one refreshed row this step.
+    """
+    step: int
+    masks: List[np.ndarray]
+    rows_moved: int
+    payload_bytes: int
+    header_bytes: int
+
+    @property
+    def bytes(self) -> int:
+        """Total cross-partition bytes this plan moves."""
+        return self.payload_bytes + self.header_bytes
+
+
+class HaloExchange:
+    """Versioned per-layer ghost activation buffers over a halo layout.
+
+    The asynchronous full-graph step (``repro.distributed.async_train``)
+    computes each layer with *historical* activations for ghost vertices:
+    layer ``l``'s buffer holds a stale copy of the global layer-``l``
+    output, refreshed row-by-row under a staleness bound.  This class owns
+    those buffers, the shared version clock, the per-step refresh policy,
+    and the traffic accounting.
+
+    Refresh policy at step ``t`` (:meth:`plan_refresh`):
+
+    * **must-refresh** — every ghost row whose age ``t - version`` exceeds
+      ``max_staleness`` (so a stale read NEVER exceeds the bound; with
+      ``max_staleness=0`` every ghost refreshes every step, degrading to
+      the synchronous halo exchange);
+    * **budget** — plus the oldest ``refresh_frac`` fraction of the
+      remaining ghost rows, spreading refreshes so staleness (and per-step
+      traffic) stays smooth instead of expiring in bursts.
+
+    Only the *pull-direction* ghosts (``halo_in``: remote sources of edges
+    into owned destinations) are buffered and charged — those are the rows
+    a pull aggregation actually reads.  Rows that are nobody's ghost are
+    never refreshed and never read remotely.
+
+    Args:
+        layout: ownership/ghost sets from :func:`build_halo`.
+        layer_dims: widths of the buffered layer outputs, *innermost
+            first* — for an L-layer GCN these are the inputs of layers
+            ``1..L-1``, i.e. ``[hidden] * (L-1)``.
+        max_staleness: bound ``S``; a stale read is at most ``S`` steps old.
+        refresh_frac: extra per-step refresh budget as a fraction of the
+            ghost set (``0.0`` = only must-refresh rows).
+        relabel: optional old→new vertex id map (e.g.
+            ``ShardedGraph.perm``) when buffers live in a relabeled/padded
+            id space; ``n_rows`` then gives the padded row count.
+        n_rows: buffer row count (default: number of vertices in
+            ``layout``).
+        bytes_per_el: element size for traffic accounting (float32 = 4).
+        clock: share an existing :class:`VersionClock` (e.g. with a
+            serving cache); default: a private clock starting at 0.
+    """
+
+    def __init__(self, layout: HaloLayout, layer_dims: Sequence[int], *,
+                 max_staleness: int = 0, refresh_frac: float = 0.0,
+                 relabel: Optional[np.ndarray] = None,
+                 n_rows: Optional[int] = None, bytes_per_el: int = 4,
+                 clock: Optional[VersionClock] = None):
+        if max_staleness < 0:
+            raise ValueError("max_staleness must be >= 0")
+        if not 0.0 <= refresh_frac <= 1.0:
+            raise ValueError("refresh_frac must be in [0, 1]")
+        self.layout = layout
+        self.max_staleness = max_staleness
+        self.refresh_frac = refresh_frac
+        self.bytes_per_el = bytes_per_el
+        self.layer_dims = list(layer_dims)
+        n = n_rows if n_rows is not None else len(layout.owner)
+        if relabel is None:
+            relabel = np.arange(len(layout.owner), dtype=np.int64)
+        # pull-direction ghost membership: member[p, r] ⇔ row r must be
+        # replicated at partition p for its aggregations
+        self.member = np.zeros((layout.n_parts, n), bool)
+        for p in range(layout.n_parts):
+            self.member[p, relabel[layout.halo_in[p]]] = True
+        self.copies = self.member.sum(0).astype(np.int64)   # (n_rows,)
+        self.ghost_rows = self.copies > 0
+        self.n_ghost = int(self.ghost_rows.sum())
+        self.clock = clock if clock is not None else VersionClock()
+        self.buffers = [VersionedBuffer(self.clock, n, d)
+                        for d in self.layer_dims]
+        # lifetime accounting (plans may be generated ahead of execution;
+        # the trainer sums CONSUMED plans for exact per-step reporting)
+        self.steps_planned = 0
+        self.total_bytes = 0
+        self.total_rows = 0
+
+    # -- refresh planning --------------------------------------------------
+    def plan_refresh(self) -> RefreshPlan:
+        """Decide (and account) this step's synchronous refresh set, stamp
+        the refreshed rows at the current clock, and advance the clock.
+
+        Returns the :class:`RefreshPlan` whose masks the jitted step
+        consumes; the fresh values themselves are stored afterwards via
+        :meth:`write_planes` (the split is what lets a host thread plan
+        step ``t+1`` while the device still computes step ``t``).
+
+        Guarantee: every ghost row NOT in the mask satisfies
+        ``age <= max_staleness`` at this step — the bounded-staleness
+        property the hypothesis tests assert.
+        """
+        now = self.clock.now
+        budget = int(self.refresh_frac * self.n_ghost)
+        masks, rows_moved, payload, headers = [], 0, 0, 0
+        for buf, dim in zip(self.buffers, self.layer_dims):
+            age = buf.age()
+            must = self.ghost_rows & (age > self.max_staleness)
+            mask = must.copy()
+            extra = budget      # budget is per layer, on top of must rows
+            if extra > 0:
+                rest = self.ghost_rows & ~must
+                idx = np.flatnonzero(rest)
+                if len(idx):
+                    oldest = idx[np.argsort(-age[idx], kind="stable")]
+                    mask[oldest[:extra]] = True
+            buf.version[mask] = now          # values arrive in write_planes
+            masks.append(mask)
+            rows_moved += int(self.copies[mask].sum())
+            payload += int(self.copies[mask].sum()) * dim * self.bytes_per_el
+            headers += HEADER_BYTES * int(
+                (self.member[:, mask].any(axis=1)).sum())
+        self.clock.tick()
+        self.steps_planned += 1
+        self.total_rows += rows_moved
+        self.total_bytes += payload + headers
+        return RefreshPlan(now, masks, rows_moved, payload, headers)
+
+    def write_planes(self, plan: RefreshPlan,
+                     planes: Sequence[np.ndarray]) -> None:
+        """Store the step's freshly computed global layer outputs into the
+        buffers, but only at the rows ``plan`` refreshed (everything else
+        keeps its historical value and version)."""
+        for buf, mask, plane in zip(self.buffers, plan.masks, planes):
+            buf.values[mask] = np.asarray(plane)[mask]
+
+    # -- views -------------------------------------------------------------
+    def ghost_planes(self) -> List[np.ndarray]:
+        """Current (stale) per-layer global activation planes, the arrays
+        the jitted step reads for non-refreshed ghost rows."""
+        return [buf.values for buf in self.buffers]
+
+    def sync_bytes_per_step(self) -> int:
+        """Traffic a fully synchronous exchange (S=0, every ghost copy,
+        every layer, every step) would move — the baseline the staleness
+        savings are measured against."""
+        per_layer_rows = int(self.copies.sum())
+        payload = sum(per_layer_rows * d * self.bytes_per_el
+                      for d in self.layer_dims)
+        headers = HEADER_BYTES * len(self.layer_dims) * int(
+            (self.member.any(axis=1)).sum())
+        return payload + headers
+
+    def stats(self) -> dict:
+        """Lifetime planning totals (may run ahead of executed steps when
+        plans are prefetched; exact consumed numbers live in the trainer)."""
+        steps = max(self.steps_planned, 1)
+        return {
+            "staleness": self.max_staleness,
+            "refresh_frac": self.refresh_frac,
+            "ghost_rows": self.n_ghost,
+            "steps_planned": self.steps_planned,
+            "refreshed_rows_total": self.total_rows,
+            "bytes_total": self.total_bytes,
+            "bytes_per_step": self.total_bytes / steps,
+            "sync_bytes_per_step": self.sync_bytes_per_step(),
+        }

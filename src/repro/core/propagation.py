@@ -140,7 +140,14 @@ def shard_graph(g: Graph, n_dev: int, *, method: str = "hash",
 
 def pull_aggregate(h_loc, edge_src_g, edge_dst_l, edge_mask, n_local,
                    *, coef_e=None):
-    """all-gather features, local segment-sum onto owned destinations."""
+    """All-gather features, local segment-sum onto owned destinations.
+
+    Args (inside shard_map over ``"g"``): ``h_loc`` ``(n_local, F)`` owned
+    rows; ``edge_src_g`` global src ids / ``edge_dst_l`` local dst ids /
+    ``edge_mask`` validity for this device's ``(E_loc,)`` edge slice;
+    ``coef_e`` optional per-edge coefficient.  Returns ``(n_local, F)``
+    aggregates; masked (pad) edges contribute zero, so pad rows never
+    aggregate."""
     h_all = jax.lax.all_gather(h_loc, AXIS, tiled=True)     # (N_pad, F)
     feat = jnp.take(h_all, edge_src_g, axis=0)
     if coef_e is not None:
@@ -151,7 +158,12 @@ def pull_aggregate(h_loc, edge_src_g, edge_dst_l, edge_mask, n_local,
 
 def push_aggregate(h_loc, edge_src_l, edge_dst_g, edge_mask, n_pad,
                    *, coef_e=None):
-    """local partial aggregates for ALL destinations, reduce-scatter."""
+    """Local partial aggregates for ALL destinations, reduce-scatter.
+
+    Args mirror :func:`pull_aggregate` with the dual layout: ``edge_src_l``
+    local src ids, ``edge_dst_g`` global dst ids, ``n_pad`` the padded
+    global row count.  Returns this device's ``(n_local, F)`` slice of the
+    psum_scattered aggregate; masked edges contribute zero."""
     feat = jnp.take(h_loc, edge_src_l, axis=0)
     if coef_e is not None:
         feat = feat * coef_e[:, None]

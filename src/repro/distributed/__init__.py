@@ -1,7 +1,19 @@
-"""Partition-aware distributed mini-batch training (DistDGL/PaGraph
-recipe): halo layout → per-partition deterministic sampling → halo-cached
-remote feature fetch → double-buffered prefetch → shard_map psum step.
+"""Partition-aware distributed training (survey §3.2).
+
+Two training families share this package:
+
+* **mini-batch** (DistDGL/PaGraph recipe): halo layout → per-partition
+  deterministic sampling → halo-cached remote feature fetch →
+  double-buffered prefetch → shard_map psum step
+  (:mod:`~repro.distributed.sampler`, :mod:`~repro.distributed.pipeline`);
+* **asynchronous full-graph** (PipeGCN/DistGNN recipe): per-layer ghost
+  activations exchanged with bounded staleness, refresh planning
+  overlapped with device compute
+  (:mod:`~repro.distributed.async_train`).
 """
+from repro.distributed.async_train import (AsyncFullGraphTrainer,
+                                           exchange_for_shards,
+                                           make_async_fullgraph_step)
 from repro.distributed.pipeline import (HostPrefetcher, collate,
                                         make_distributed_minibatch_step)
 from repro.distributed.sampler import (DistributedMinibatchSampler,
@@ -9,11 +21,14 @@ from repro.distributed.sampler import (DistributedMinibatchSampler,
                                        PartitionFeatureStore, device_blocks)
 
 __all__ = [
+    "AsyncFullGraphTrainer",
     "DistributedMinibatchSampler",
     "PartitionBatch",
     "PartitionFeatureStore",
     "HostPrefetcher",
     "collate",
     "device_blocks",
+    "exchange_for_shards",
+    "make_async_fullgraph_step",
     "make_distributed_minibatch_step",
 ]

@@ -1,0 +1,266 @@
+"""Staleness-bounded asynchronous full-graph training (survey §3.2.7).
+
+The third major system family after sampling-based mini-batch training
+(``repro.distributed.sampler``/``pipeline``) and online inference
+(``repro.serving``): full-graph training where boundary ("ghost")
+activations are exchanged with *bounded staleness* instead of a
+synchronous halo exchange every layer — the PipeGCN / DistGNN /
+SANCUS recipe that hides communication behind compute.
+
+Composition of existing pieces:
+
+* :class:`repro.core.halo.HaloExchange` — versioned per-layer ghost
+  buffers under the shared :class:`repro.core.caching.VersionClock`
+  (the same staleness implementation serving's ``EmbeddingCache`` uses);
+* :func:`repro.models.gnn.model.forward_stale` — the GCN forward that
+  aggregates historical activations for non-refreshed ghosts;
+* the double-buffering pattern from :class:`~repro.distributed.pipeline.
+  HostPrefetcher` — the refresh *plan* for step ``t+1`` (mask selection,
+  version stamping, byte accounting) is produced on a host thread while
+  the jitted step still computes step ``t``.
+
+Semantics per step ``t`` with bound ``S`` and budget ``F``:
+
+1. the planner marks every ghost row whose staleness would exceed ``S``
+   (plus the oldest ``F``-fraction of the rest) for *synchronous* refresh;
+2. the shard_map step computes with fresh activations for owned +
+   refreshed rows and historical buffer values for everything else;
+3. refreshed rows' freshly gathered values are written back to the
+   buffers, stamped with the step's clock value.
+
+``S = 0`` forces every ghost row into every plan, degrading exactly to
+the synchronous pull step of
+:func:`repro.core.propagation.make_distributed_gcn_step` — the
+equivalence ``tests/async_train_check.py`` proves to ≤ 1e-5 per
+parameter.  Larger ``S`` strictly reduces cross-partition bytes/step
+(each row crosses the wire at most every ``S+1`` steps).
+"""
+from __future__ import annotations
+
+import time
+from typing import List, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core.halo import HaloExchange, build_halo
+from repro.core.partitioning import EdgeCutPartition
+from repro.core.propagation import AXIS, ShardedGraph, shard_graph
+from repro.distributed.pipeline import HostPrefetcher
+from repro.graph.structure import Graph
+from repro.models.gnn import model as GM
+from repro.models.gnn.model import GNNConfig
+
+
+def exchange_for_shards(g: Graph, sg: ShardedGraph,
+                        layer_dims: Sequence[int], *,
+                        max_staleness: int = 0, refresh_frac: float = 0.0,
+                        clock=None) -> HaloExchange:
+    """Build the :class:`HaloExchange` matching a ``ShardedGraph``.
+
+    ``shard_graph`` relabels vertices to contiguous per-device ranges, so
+    ownership is recoverable as ``perm[v] // n_local``; the halo layout is
+    computed in original ids and the exchange buffers live in the padded
+    relabeled space the shard_map step indexes into.
+
+    Args:
+        g: the original graph.
+        sg: the sharded layout built from it.
+        layer_dims: widths of the buffered layer outputs (``[hidden] *
+            (num_layers - 1)`` for the GCN stack).
+        max_staleness / refresh_frac / clock: forwarded to
+            :class:`HaloExchange`.
+    """
+    part = EdgeCutPartition(
+        assignment=(sg.perm // sg.n_local).astype(np.int64),
+        n_parts=sg.n_dev)
+    layout = build_halo(g, part)
+    return HaloExchange(layout, layer_dims, max_staleness=max_staleness,
+                        refresh_frac=refresh_frac, relabel=sg.perm,
+                        n_rows=sg.n_local * sg.n_dev, clock=clock)
+
+
+def make_async_fullgraph_step(optimizer, n_dev: int):
+    """Build the jitted staleness-bounded full-graph GCN step.
+
+    Returns ``(mesh, train_step)`` where::
+
+        train_step(params, opt_state, sg, ghosts, refresh)
+            -> (params, opt_state, loss, planes)
+
+    ``sg`` is a :class:`~repro.core.propagation.ShardedGraph`; ``ghosts``
+    are the per-layer ``(N_pad, F_l)`` stale activation planes
+    (replicated); ``refresh`` the per-layer ``(N_pad,)`` bool refresh
+    masks; ``planes`` the freshly all-gathered layer outputs to write
+    back.  Params/opt_state replicated, graph arrays sharded over mesh
+    axis ``"g"``, gradients psum'd — identical conventions to
+    :func:`repro.core.propagation.make_distributed_gcn_step`.
+    """
+    mesh = Mesh(np.array(jax.devices()[:n_dev]), (AXIS,))
+
+    def step(params, opt_state, x, es, ed, em, indeg, outdeg, labels,
+             lmask, ghosts, refresh):
+        n_local = x.shape[0]
+        n_pad = outdeg.shape[0]
+        idx = jax.lax.axis_index(AXIS)
+        own_rows = (jnp.arange(n_pad, dtype=jnp.int32) // n_local) == idx
+        # parameter-free count psum'd OUTSIDE the differentiated function
+        # (under check_rep=False a psum inside loss_fn transposes to a
+        # second psum, scaling gradients by n_dev — see propagation.py)
+        cnt = jnp.maximum(jax.lax.psum(jnp.sum(lmask), AXIS), 1.0)
+
+        def loss_fn(p):
+            h, planes = GM.forward_stale(
+                p, x, (es, ed, em, indeg, outdeg, n_local), ghosts,
+                refresh, own_rows, axis=AXIS)
+            logz = jax.nn.logsumexp(h, axis=-1)
+            gold = jnp.take_along_axis(h, labels[:, None], axis=-1)[:, 0]
+            return jnp.sum((logz - gold) * lmask) / cnt, planes
+
+        (local_loss, planes), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params)
+        loss = jax.lax.psum(local_loss, AXIS)
+        grads = jax.tree.map(lambda g_: jax.lax.psum(g_, AXIS), grads)
+        params, opt_state = optimizer.apply(params, grads, opt_state)
+        return params, opt_state, loss, planes
+
+    rep, shard = P(), P(AXIS)
+    smapped = shard_map(
+        step, mesh=mesh,
+        in_specs=(rep, rep, shard, shard, shard, shard, shard, rep,
+                  shard, shard, rep, rep),
+        out_specs=(rep, rep, rep, rep), check_rep=False)
+    jitted = jax.jit(smapped)
+
+    def train_step(params, opt_state, sg: ShardedGraph,
+                   ghosts: Sequence[jax.Array],
+                   refresh: Sequence[jax.Array]):
+        return jitted(params, opt_state, sg.x, sg.edge_src_g,
+                      sg.edge_dst_l, sg.edge_mask, sg.in_deg, sg.out_deg,
+                      sg.labels, sg.label_mask, tuple(ghosts),
+                      tuple(refresh))
+
+    return mesh, train_step
+
+
+class AsyncFullGraphTrainer:
+    """Host driver for staleness-bounded asynchronous full-graph training.
+
+    Owns the sharded layout, the :class:`HaloExchange`, and the jitted
+    step; :meth:`run` overlaps refresh planning with device compute via
+    :class:`~repro.distributed.pipeline.HostPrefetcher` and keeps exact
+    consumed-plan traffic accounting.
+
+    Args:
+        g: the training graph (features + labels required).
+        cfg: GCN config (``arch="gcn"``; the full-graph shard_map path is
+            GCN-specific, like the synchronous one).
+        optimizer: an ``optim``-style optimizer (``init``/``apply``).
+        n_dev: mesh size (one partition per device).
+        partitioner: edge-cut method name (``hash``/``ldg``/``fennel``).
+        staleness: bound ``S`` — a ghost activation may be up to ``S``
+            steps old; ``0`` = synchronous halo exchange.
+        refresh_frac: extra per-step refresh budget (fraction of ghosts).
+    """
+
+    def __init__(self, g: Graph, cfg: GNNConfig, optimizer, n_dev: int, *,
+                 partitioner: str = "hash", staleness: int = 0,
+                 refresh_frac: float = 0.0):
+        if cfg.arch != "gcn":
+            raise ValueError("async full-graph training implements GCN "
+                             "(like the synchronous shard_map path)")
+        self.g = g
+        self.cfg = cfg
+        self.n_dev = n_dev
+        self.sg = shard_graph(g, n_dev, method=partitioner)
+        layer_dims = [cfg.hidden] * (cfg.num_layers - 1)
+        self.exchange = exchange_for_shards(
+            g, self.sg, layer_dims, max_staleness=staleness,
+            refresh_frac=refresh_frac)
+        self.mesh, self.step = make_async_fullgraph_step(optimizer, n_dev)
+        self.steps_run = 0
+        self.consumed_bytes = 0
+        self.consumed_rows = 0
+        self.step_times_s: List[float] = []
+
+    # -- training loop -----------------------------------------------------
+    def run(self, params, opt_state, epochs: int, *, log_every: int = 0,
+            prefetch_plans: bool = True):
+        """Train ``epochs`` full-graph steps; returns
+        ``(params, opt_state, last_loss)``.
+
+        The planner produces exactly ``epochs`` refresh plans (then ``None``
+        sentinels), so version stamps and byte accounting correspond
+        one-to-one to executed steps even though planning runs ahead on
+        the prefetch thread.
+        """
+        produced = {"n": 0}
+
+        def next_plan():
+            if produced["n"] >= epochs:
+                return None              # sentinel: planner budget spent
+            produced["n"] += 1
+            return self.exchange.plan_refresh()
+
+        planner = HostPrefetcher(next_plan) if prefetch_plans else None
+        loss = jnp.zeros(())
+        # device-resident ghost planes, seeded from the host buffers once;
+        # per step only the refreshed rows change (a where(), not a full
+        # (N_pad, F) host->device upload), keeping step_ms honest
+        ghosts = [jnp.asarray(b) for b in self.exchange.ghost_planes()]
+        try:
+            for epoch in range(epochs):
+                plan = next(planner) if planner else next_plan()
+                t0 = time.perf_counter()
+                masks = [jnp.asarray(m) for m in plan.masks]
+                params, opt_state, loss, planes = self.step(
+                    params, opt_state, self.sg, ghosts, masks)
+                ghosts = [jnp.where(m[:, None], pl, gh) for m, pl, gh
+                          in zip(masks, planes, ghosts)]
+                self.exchange.write_planes(
+                    plan, [np.asarray(pl) for pl in planes])
+                self.step_times_s.append(time.perf_counter() - t0)
+                self.steps_run += 1
+                self.consumed_bytes += plan.bytes
+                self.consumed_rows += plan.rows_moved
+                if log_every and (epoch % log_every == 0
+                                  or epoch == epochs - 1):
+                    print(f"epoch {epoch:3d} loss {float(loss):.4f} "
+                          f"refresh_rows {plan.rows_moved} "
+                          f"bytes {plan.bytes}")
+        finally:
+            if planner is not None:
+                planner.close()
+        return params, opt_state, float(loss)
+
+    # -- evaluation / reporting --------------------------------------------
+    def accuracy(self, params) -> float:
+        """Full-graph accuracy of ``params`` on a single device (exact,
+        no staleness — the number the accuracy-gap benchmark reports)."""
+        from repro.core.abstraction import DeviceGraph
+        dg = DeviceGraph.from_graph(self.g)
+        logits = GM.forward_full(self.cfg, params, dg,
+                                 jnp.asarray(self.g.features))
+        return float(GM.accuracy(logits, jnp.asarray(self.g.labels)))
+
+    def stats(self) -> dict:
+        """Consumed-plan traffic + timing, with the synchronous baseline
+        for savings reporting."""
+        steps = max(self.steps_run, 1)
+        sync = self.exchange.sync_bytes_per_step()
+        per_step = self.consumed_bytes / steps
+        return {
+            "staleness": self.exchange.max_staleness,
+            "refresh_frac": self.exchange.refresh_frac,
+            "steps": self.steps_run,
+            "ghost_rows": self.exchange.n_ghost,
+            "bytes_per_step": per_step,
+            "rows_per_step": self.consumed_rows / steps,
+            "sync_bytes_per_step": sync,
+            "comm_savings": 1.0 - per_step / sync if sync else 0.0,
+            "mean_step_s": (sum(self.step_times_s) / steps
+                            if self.step_times_s else 0.0),
+        }

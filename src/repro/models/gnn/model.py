@@ -87,6 +87,67 @@ def forward_blocks(cfg: GNNConfig, params, blocks: Sequence[DeviceGraph],
     return h
 
 
+def forward_stale(params, h_own, sg_local, ghosts, refresh, own_rows,
+                  *, axis: str = "g"):
+    """Staleness-bounded full-graph GCN forward (runs under ``shard_map``).
+
+    The asynchronous counterpart of
+    :func:`repro.core.propagation.gcn_forward_local`: layer ``i >= 1``
+    aggregates *historical* activations for ghost sources (per-layer stale
+    planes from a :class:`repro.core.halo.HaloExchange`) and fresh
+    activations only for owned rows and the rows this step's refresh plan
+    exchanges synchronously.  Layer 0 consumes the static input features,
+    which never go stale.
+
+    Args:
+        params: per-layer GCN params ``[{"w", "b"}, ...]``.
+        h_own: ``(n_local, F)`` this device's owned input features.
+        sg_local: ``(es, ed, em, indeg_l, outdeg_all, n_local)`` — the
+            per-device pull edge slices, local in-degree, replicated global
+            out-degree, and owned-row count (``ShardedGraph`` layout; pad
+            edges are masked out by ``em`` so pad rows never aggregate).
+        ghosts: per-layer ``(N_pad, F_l)`` replicated stale activation
+            planes, innermost first (layer ``l`` plane feeds layer ``l+1``).
+        refresh: per-layer ``(N_pad,)`` bool — rows served *fresh* this
+            step (this step's synchronous exchange).  All-True degrades
+            exactly to the synchronous pull forward.
+        own_rows: ``(N_pad,)`` bool — rows this device owns (always fresh).
+        axis: mesh axis name (default ``"g"``).
+
+    Returns:
+        ``(h, planes)`` — ``h`` is the ``(n_local, num_classes)`` output for
+        owned rows; ``planes`` are the freshly all-gathered global layer
+        outputs ``h_0 .. h_{L-2}`` for the host to write back into the
+        ghost buffers at the refreshed rows.
+
+    Gradient semantics: stale rows enter as constants (no gradient flows
+    into the buffers), refreshed rows participate in the synchronous
+    all-gather and carry exact gradients — the PipeGCN-style bounded-
+    staleness approximation whose S=0 case is bitwise the synchronous step.
+    """
+    es, ed, em, indeg_l, outdeg_all, n_local = sg_local
+    h = h_own
+    planes = []
+    n_layers = len(params)
+    for i, p in enumerate(params):
+        h_all_fresh = jax.lax.all_gather(h, axis, tiled=True)  # (N_pad, F)
+        if i == 0:
+            h_all = h_all_fresh          # static inputs: never stale
+        else:
+            planes.append(h_all_fresh)   # global layer-(i-1) output
+            use_fresh = refresh[i - 1] | own_rows
+            h_all = jnp.where(use_fresh[:, None], h_all_fresh,
+                              ghosts[i - 1])
+        hw = h_all @ p["w"]
+        coef = (jax.lax.rsqrt(jnp.take(outdeg_all, es))
+                * jax.lax.rsqrt(jnp.take(indeg_l, ed)))
+        feat = jnp.take(hw, es, axis=0) * (coef * em)[:, None]
+        h = jax.ops.segment_sum(feat, ed, n_local) + p["b"]
+        if i + 1 < n_layers:
+            h = jax.nn.relu(h)
+    return h, planes
+
+
 def forward_blocks_cached(cfg: GNNConfig, params,
                           inner_blocks: Sequence[DeviceGraph],
                           outer_block: DeviceGraph, x_input,

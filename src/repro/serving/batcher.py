@@ -27,6 +27,11 @@ PAD_ID = -1
 
 @dataclasses.dataclass
 class MicroBatch:
+    """One padded inference batch: ``node_ids`` is ``(bucket,)`` with
+    UNIQUE real ids as a prefix and ``PAD_ID`` (-1) pads; ``slots[j]``
+    maps request ``j`` to its id slot (duplicate requests for one node
+    share a slot).  Pad slots never sample, fetch, or aggregate — they
+    only keep the shape static."""
     requests: List[InferenceRequest]
     node_ids: np.ndarray        # (bucket,) int64, UNIQUE ids, PAD_ID pads
     bucket: int
@@ -45,6 +50,21 @@ class MicroBatch:
 
 
 class BucketedBatcher:
+    """Dynamic micro-batcher over a declared bucket-size vocabulary.
+
+    Args:
+        buckets: allowed padded batch sizes (sorted, deduped); every
+            emitted :class:`MicroBatch` has ``bucket ∈ buckets``, so the
+            downstream jit cache holds at most ``len(buckets)`` entries
+            per arch.
+        max_wait_s: head-of-line latency bound — a queued request never
+            waits longer than this for a batch to form (the serve loop's
+            virtual clock honors it as an event deadline).
+
+    ``form`` returns ``None`` when no emission rule fires; ``pad_overhead``
+    reports the fraction of emitted slots that were padding.
+    """
+
     def __init__(self, buckets: Sequence[int] = (1, 2, 4, 8, 16, 32, 64),
                  *, max_wait_s: float = 0.002):
         if not buckets:

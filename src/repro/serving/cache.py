@@ -6,7 +6,10 @@ whose neighborhood is cached skips the entire sub-tree expansion below that
 layer — neighbor sampling, feature fetches and aggregation all disappear
 for hit nodes.
 
-Consistency model:
+Consistency model (implemented by the shared
+:class:`repro.core.caching.VersionClock` / ``VersionedBuffer`` pair — the
+same staleness substrate the training-side
+:class:`repro.core.halo.HaloExchange` uses):
 
 * a global integer **version clock** advances on :meth:`tick` (one tick ≈
   one feature/model refresh epoch);
@@ -25,22 +28,42 @@ from typing import Dict, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.caching import CACHE_POLICIES, FeatureStore
+from repro.core.caching import (CACHE_POLICIES, NEVER, FeatureStore,
+                                VersionClock, VersionedBuffer)
 from repro.graph.structure import Graph
 
-# sentinel "never written"; large-negative (not int64 min) so computing
-# ``clock - NEVER`` cannot overflow int64
-NEVER = -(2 ** 62)
+__all__ = ["EmbeddingCache", "NEVER"]
 
 
 class EmbeddingCache:
+    """Bounded-staleness historical-embedding cache for serving.
+
+    Args:
+        g: the served graph (features may be mutated via
+           :meth:`update_features`).
+        layer_dims: width of each cached plane — one per cached layer
+            output (the server caches the final-layer input, so one plane
+            of width ``hidden``).
+        policy: admission policy name from
+            :data:`repro.core.caching.CACHE_POLICIES`.
+        capacity: admitted-node budget; ``None`` = whole graph, ``0`` is
+            honored as "admit nothing".
+        max_staleness: entries older than this many clock ticks are misses.
+        feature_capacity: budget of the input-feature
+            :class:`FeatureStore` layer (defaults to ``capacity``).
+
+    Shape conventions: every lookup/store is *slot-aligned* over a padded
+    id vector (``-1`` = empty slot).  Padded slots are neither hits nor
+    misses and are never written, so batch shapes stay static.
+    """
+
     def __init__(self, g: Graph, layer_dims: Sequence[int], *,
                  policy: str = "degree", capacity: Optional[int] = None,
                  max_staleness: int = 0,
                  feature_capacity: Optional[int] = None):
         self.g = g
         self.max_staleness = max_staleness
-        self.clock = 0
+        self.vclock = VersionClock()
         n = g.num_nodes
         # None = unbounded (whole graph); 0 is honored as "admit nothing"
         capacity = n if capacity is None else capacity
@@ -51,11 +74,9 @@ class EmbeddingCache:
         self.slot = np.full(n, -1, np.int64)
         self.slot[admit_ids] = np.arange(len(admit_ids))
         rows = len(admit_ids) + 1
-        self.values: Dict[int, np.ndarray] = {
-            l: np.zeros((rows, d), np.float32)
+        self.planes: Dict[int, VersionedBuffer] = {
+            l: VersionedBuffer(self.vclock, rows, d)
             for l, d in enumerate(layer_dims)}
-        self.version: Dict[int, np.ndarray] = {
-            l: np.full(rows, NEVER, np.int64) for l in self.values}
         # input-feature cache (PaGraph/AliGraph layer of the hierarchy)
         if feature_capacity is None:
             feature_capacity = capacity
@@ -64,36 +85,50 @@ class EmbeddingCache:
         self.hits = 0
         self.misses = 0
 
+    @property
+    def clock(self) -> int:
+        """Current value of the shared version clock."""
+        return self.vclock.now
+
     # -- embedding plane ---------------------------------------------------
     def lookup(self, layer: int, ids: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
-        """Slot-aligned read: returns ``(values, fresh)`` where ``fresh``
-        marks slots served from cache within the staleness bound.  Padded
-        slots (id < 0) are neither hits nor misses."""
+        """Slot-aligned bounded-staleness read.
+
+        Args:
+            layer: cached plane index.
+            ids: ``(B,)`` node ids, ``-1`` = padded slot.
+
+        Returns:
+            ``(values, fresh)`` — ``values`` is ``(B, dim)`` (garbage rows
+            where not fresh), ``fresh`` marks slots served from cache
+            within the staleness bound.  Padded slots are neither hits nor
+            misses.
+        """
         ids = np.asarray(ids)
         valid = ids >= 0
+        plane = self.planes[layer]
         slot = self.slot[np.maximum(ids, 0)]
-        row = np.where(slot >= 0, slot, len(self.version[layer]) - 1)
-        age = self.clock - self.version[layer][row]
-        fresh = valid & (age <= self.max_staleness)
+        row = np.where(slot >= 0, slot, plane.rows - 1)
+        fresh = valid & plane.fresh_mask(self.max_staleness, row)
         self.hits += int(fresh.sum())
         self.misses += int((valid & ~fresh).sum())
-        return self.values[layer][row], fresh
+        return plane.values[row], fresh
 
     def store(self, layer: int, ids: np.ndarray, values: np.ndarray,
               mask: np.ndarray) -> None:
         """Write freshly computed rows for admitted nodes (slot-aligned;
-        ``mask`` selects which slots to write)."""
+        ``mask`` selects which slots to write).  Non-admitted and padded
+        slots are silently skipped."""
         ids = np.asarray(ids)
         write = np.asarray(mask, bool) & (ids >= 0)
         write &= self.slot[np.maximum(ids, 0)] >= 0
         rows = self.slot[ids[write]]
-        self.values[layer][rows] = np.asarray(values)[write]
-        self.version[layer][rows] = self.clock
+        self.planes[layer].write(rows, np.asarray(values)[write])
 
     # -- consistency -------------------------------------------------------
     def tick(self, n: int = 1) -> None:
         """Advance the version clock (a feature/model refresh epoch)."""
-        self.clock += n
+        self.vclock.tick(n)
 
     def invalidate(self, ids: np.ndarray) -> None:
         """Drop entries for nodes whose input features changed — their
@@ -101,8 +136,8 @@ class EmbeddingCache:
         ids = np.asarray(ids)
         rows = self.slot[ids[ids >= 0]]
         rows = rows[rows >= 0]
-        for layer in self.version:
-            self.version[layer][rows] = NEVER
+        for plane in self.planes.values():
+            plane.invalidate(rows)
 
     def update_features(self, ids: np.ndarray, rows: np.ndarray) -> None:
         """Feature update path: mutate the store and invalidate dependents.
@@ -116,10 +151,12 @@ class EmbeddingCache:
     # -- stats -------------------------------------------------------------
     @property
     def hit_ratio(self) -> float:
+        """Fraction of non-padded lookups served within the bound."""
         tot = self.hits + self.misses
         return self.hits / tot if tot else 0.0
 
     def stats(self) -> dict:
+        """Combined embedding + feature-layer counters for summaries."""
         return {
             "embedding_hit_ratio": self.hit_ratio,
             "embedding_hits": self.hits,

@@ -38,6 +38,22 @@ def _propagate_need(b: Block, need: np.ndarray) -> np.ndarray:
 
 
 class ServingSampler:
+    """Fixed-shape inference-time neighbor sampler.
+
+    Args:
+        g: the served graph (``g.reverse()`` is precomputed for in-edge
+            expansion).
+        fanouts: per-layer fanout, innermost first — one per model layer.
+        seed: base of the per-``(seed, layer, node)`` rng, so a node's
+            sampled neighborhood is independent of batch composition.
+
+    Shape convention: seeds arrive padded to a batcher bucket (``-1`` =
+    empty slot); every emitted :class:`~repro.core.sampling.Block` has the
+    caps declared by :meth:`block_shapes` — a pure function of
+    ``(bucket, fanouts)`` — and pad slots carry no edges, so pad rows
+    never aggregate into real outputs.
+    """
+
     def __init__(self, g: Graph, fanouts: Sequence[int], *, seed: int = 0):
         self.g = g
         self.gr = g.reverse()

@@ -39,6 +39,10 @@ from repro.serving.sampler import ServingSampler, needed_feature_mask
 
 @dataclasses.dataclass
 class ServeStats:
+    """Serve-loop counters: requests served, batches formed, wall time,
+    per-request latencies (virtual-clock seconds), and the set of jitted
+    shapes (``len(jit_shapes)`` bounds recompilation —
+    ≤ one entry per declared bucket)."""
     served: int = 0
     batches: int = 0
     wall_s: float = 0.0
@@ -66,6 +70,28 @@ class ServeStats:
 
 
 class GNNInferenceServer:
+    """The online GNN inference server: admit → micro-batch → sample →
+    cache → forward (see module docstring for the per-batch control flow).
+
+    Args:
+        g: served graph (features required).
+        cfg: model config (any sampled arch with ``num_layers >= 2``;
+            appnp is full-graph and rejected).
+        params: trained parameters for ``cfg``.
+        fanouts: per-layer sampling fanouts (one per model layer).
+        buckets: declared batch-size vocabulary (static shapes — at most
+            one jit entry per bucket, asserted via ``jit_entries``).
+        cache_policy / cache_capacity / max_staleness: admission policy,
+            budget, and staleness bound of the historical-embedding
+            :class:`EmbeddingCache` (``"none"`` disables write-back).
+        max_wait_s: head-of-line batching deadline.
+        seed: sampling determinism base.
+
+    :meth:`run` serves a workload under a virtual clock (arrival stamps +
+    measured compute), so p50/p99 include queueing delay and runs are
+    reproducible; :meth:`summary` merges latency, cache, and pad stats.
+    """
+
     def __init__(self, g: Graph, cfg: GNNConfig, params, *,
                  fanouts: Sequence[int] = (5, 5),
                  buckets: Sequence[int] = (1, 4, 16, 64),

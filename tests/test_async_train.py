@@ -1,0 +1,144 @@
+"""Staleness-bounded asynchronous full-graph training invariants.
+
+The subprocess matrix (``tests/async_train_check.py``, forced multi-device)
+proves S=0 degrades exactly to the synchronous pull step and that
+bytes/step strictly drops as the bound grows.  The in-process tests cover
+the host-side refresh planning layer: staleness-bound enforcement,
+monotonic traffic, value write-back discipline, and the relabeled
+``ShardedGraph`` ghost membership.
+"""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run_check(n_dev, partitioner, timeout=600):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    env.pop("XLA_FLAGS", None)
+    return subprocess.run(
+        [sys.executable,
+         os.path.join(ROOT, "tests", "async_train_check.py"),
+         str(n_dev), partitioner],
+        capture_output=True, text=True, timeout=timeout, env=env)
+
+
+@pytest.mark.distributed
+@pytest.mark.parametrize("partitioner", ["hash", "ldg"])
+@pytest.mark.parametrize("n_dev", [2, 4])
+def test_async_equivalence_and_monotonicity(n_dev, partitioner):
+    r = _run_check(n_dev, partitioner)
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "PASS async-equivalence" in r.stdout, r.stdout
+
+
+# ---------------------------------------------------------------------------
+# in-process host-side refresh planning (no devices needed)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def graph(graph):
+    return graph("reddit-like", 800)
+
+
+@pytest.fixture(scope="module")
+def layout(graph):
+    from repro.core.halo import build_halo
+    from repro.core.partitioning import partition
+    return build_halo(graph, partition(graph, 4, "hash"))
+
+
+def _avg_bytes(layout, s, steps=12, frac=0.05, dims=(32,)):
+    from repro.core.halo import HaloExchange
+    ex = HaloExchange(layout, dims, max_staleness=s, refresh_frac=frac)
+    total = sum(ex.plan_refresh().bytes for _ in range(steps))
+    return total / steps
+
+
+def test_bytes_per_step_strictly_decreasing_in_staleness(layout):
+    """The acceptance property, host-side: avg bytes/step drops strictly
+    as S goes 0 -> 1 -> 2 on the reddit-like graph."""
+    b0, b1, b2 = (_avg_bytes(layout, s) for s in (0, 1, 2))
+    assert b0 > b1 > b2, (b0, b1, b2)
+
+
+def test_staleness_zero_plans_every_ghost_every_step(layout):
+    from repro.core.halo import HaloExchange
+    ex = HaloExchange(layout, [16], max_staleness=0)
+    for _ in range(3):
+        plan = ex.plan_refresh()
+        np.testing.assert_array_equal(plan.masks[0], ex.ghost_rows)
+        assert plan.rows_moved == int(ex.copies.sum())
+    # every plan moves the full synchronous volume
+    assert ex.stats()["bytes_per_step"] == ex.sync_bytes_per_step()
+
+
+def test_stale_reads_never_exceed_bound(layout):
+    """Plans must refresh every ghost row whose age would exceed S, so any
+    row served stale is at most S steps old."""
+    from repro.core.halo import HaloExchange
+    S = 3
+    ex = HaloExchange(layout, [8, 8], max_staleness=S, refresh_frac=0.1)
+    for _ in range(10):
+        ages_before = [b.age() for b in ex.buffers]
+        plan = ex.plan_refresh()
+        for age, mask in zip(ages_before, plan.masks):
+            served = ex.ghost_rows & ~mask
+            assert (age[served] <= S).all()
+
+
+def test_write_planes_only_touches_masked_rows(layout):
+    from repro.core.halo import HaloExchange
+    ex = HaloExchange(layout, [4], max_staleness=1, refresh_frac=0.0)
+    n = ex.buffers[0].rows
+    ex.plan_refresh()                                # cold: all ghosts
+    ex.plan_refresh()                                # warm: none (S=1)
+    plan = ex.plan_refresh()                         # expiry: all again
+    before = ex.buffers[0].values.copy()
+    plane = np.full((n, 4), 7.0, np.float32)
+    ex.write_planes(plan, [plane])
+    after = ex.buffers[0].values
+    np.testing.assert_array_equal(after[~plan.masks[0]],
+                                  before[~plan.masks[0]])
+    assert (after[plan.masks[0]] == 7.0).all()
+
+
+def test_exchange_for_shards_ghosts_are_cut_edge_sources(graph):
+    """In the relabeled space, a row is a ghost of partition p iff it is a
+    remote source of an edge into p's owned destinations (pull direction),
+    and owned rows are never their own ghosts."""
+    from repro.core.propagation import shard_graph
+    from repro.distributed import exchange_for_shards
+
+    sg = shard_graph(graph, 4, method="hash")
+    ex = exchange_for_shards(graph, sg, [8], max_staleness=0)
+    e = graph.edges()
+    src_new, dst_new = sg.perm[e[:, 0]], sg.perm[e[:, 1]]
+    owner_src, owner_dst = src_new // sg.n_local, dst_new // sg.n_local
+    want = np.zeros_like(ex.member)
+    cut = owner_src != owner_dst
+    for s_, p in zip(src_new[cut], owner_dst[cut]):
+        want[p, s_] = True
+    np.testing.assert_array_equal(ex.member, want)
+    for p in range(4):
+        own = (np.arange(ex.member.shape[1]) // sg.n_local) == p
+        assert not (ex.member[p] & own).any()
+
+
+def test_refresh_frac_budget_spreads_refreshes(layout):
+    """With a budget, steady-state per-step traffic sits between the pure
+    expiry rate and the synchronous volume, and planning stays smooth."""
+    from repro.core.halo import HaloExchange
+    ex = HaloExchange(layout, [16], max_staleness=4, refresh_frac=0.25)
+    plans = [ex.plan_refresh() for _ in range(12)]
+    rows = [p.rows_moved for p in plans[2:]]         # skip cold start
+    assert max(rows) > 0
+    budget = int(0.25 * ex.n_ghost)
+    # after warmup no step should need to move every ghost again
+    assert max(rows) < int(ex.copies.sum())
+    assert min(r for r in rows if r) >= min(budget, 1)

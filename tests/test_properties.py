@@ -210,3 +210,56 @@ def test_padded_rows_never_leak_into_aggregation(seed, fill):
     valid = np.asarray(b.dst_nodes) >= 0
     np.testing.assert_allclose(dirty[valid], clean[valid],
                                rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# shared staleness clock invariants (core/caching.py + core/halo.py)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(20, 100), p=st.integers(2, 4),
+       s=st.integers(0, 4), frac=st.floats(0.0, 0.5),
+       steps=st.integers(1, 15), seed=st.integers(0, 30))
+def test_ghost_buffer_never_served_beyond_staleness_bound(n, p, s, frac,
+                                                          steps, seed):
+    """A ghost buffer row refreshed at version v is never served once
+    clock - v > S: every plan's stale-served set has age <= S, for any
+    bound, budget, and step count."""
+    from repro.core import partitioning as PT
+    from repro.core.halo import HaloExchange, build_halo
+    g = G.erdos_renyi(n, 4.0, seed=seed, directed=False)
+    lay = build_halo(g, PT.partition(g, p, "hash"))
+    ex = HaloExchange(lay, [4, 8], max_staleness=s, refresh_frac=frac)
+    for _ in range(steps):
+        ages = [b.age() for b in ex.buffers]
+        plan = ex.plan_refresh()
+        assert plan.step == ex.clock.now - 1
+        for age, mask in zip(ages, plan.masks):
+            served_stale = ex.ghost_rows & ~mask
+            assert (age[served_stale] <= s).all()
+            # refresh never targets non-ghost rows
+            assert not mask[~ex.ghost_rows].any()
+
+
+@settings(max_examples=20, deadline=None)
+@given(s=st.integers(0, 3), writes=st.lists(st.integers(0, 9), min_size=1,
+                                            max_size=12),
+       seed=st.integers(0, 20))
+def test_versioned_buffer_fresh_iff_within_bound(s, writes, seed):
+    """The unified VersionedBuffer serves exactly the rows written within
+    the last S ticks — the single staleness predicate both the serving
+    EmbeddingCache and the training HaloExchange rely on."""
+    from repro.core.caching import VersionClock, VersionedBuffer
+    clock = VersionClock()
+    buf = VersionedBuffer(clock, 10, 3)
+    last_write = {}
+    rng = np.random.default_rng(seed)
+    for row in writes:
+        buf.write(np.asarray([row]), rng.normal(size=(1, 3)))
+        last_write[row] = clock.now
+        if rng.random() < 0.5:
+            clock.tick()
+        fresh = buf.fresh_mask(s)
+        for r in range(10):
+            want = r in last_write and clock.now - last_write[r] <= s
+            assert fresh[r] == want, (r, clock.now, last_write.get(r))

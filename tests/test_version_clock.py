@@ -1,0 +1,104 @@
+"""Unit tests for the unified staleness substrate in ``core/caching.py``:
+:class:`VersionClock` / :class:`VersionedBuffer`, and the contract that the
+serving :class:`EmbeddingCache` and the training
+:class:`~repro.core.halo.HaloExchange` are views over the same clock
+semantics (the 18 serving behaviors themselves are regression-guarded by
+``tests/test_serving.py``)."""
+import numpy as np
+import pytest
+
+from repro.core.caching import NEVER, VersionClock, VersionedBuffer
+
+
+def test_never_written_rows_fail_every_bound():
+    buf = VersionedBuffer(VersionClock(), 5, 2)
+    assert (buf.version == NEVER).all()
+    assert not buf.fresh_mask(0).any()
+    assert not buf.fresh_mask(10**9).any()
+    # and age computation does not overflow int64
+    assert (buf.age() > 0).all()
+
+
+def test_write_stamps_current_clock_and_bounds_reads():
+    clock = VersionClock()
+    buf = VersionedBuffer(clock, 4, 3)
+    buf.write(np.asarray([0, 2]), np.ones((2, 3), np.float32))
+    assert buf.fresh_mask(0)[[0, 2]].all()
+    assert not buf.fresh_mask(0)[[1, 3]].any()
+    clock.tick()
+    assert not buf.fresh_mask(0)[[0, 2]].any()       # staleness 1 > 0
+    assert buf.fresh_mask(1)[[0, 2]].all()           # within bound 1
+    clock.tick()
+    assert not buf.fresh_mask(1)[[0, 2]].any()       # staleness 2 > 1
+
+
+def test_boolean_mask_writes_and_age_subsets():
+    clock = VersionClock()
+    buf = VersionedBuffer(clock, 6, 2)
+    mask = np.asarray([True, False, True, False, False, True])
+    buf.write(mask, np.full((3, 2), 5.0, np.float32))
+    np.testing.assert_array_equal(buf.values[mask],
+                                  np.full((3, 2), 5.0, np.float32))
+    assert not buf.values[~mask].any()
+    clock.tick(3)
+    np.testing.assert_array_equal(buf.age(np.flatnonzero(mask)),
+                                  np.full(3, 3))
+
+
+def test_invalidate_is_permanent_until_rewrite():
+    clock = VersionClock()
+    buf = VersionedBuffer(clock, 3, 2)
+    buf.write(np.arange(3), np.ones((3, 2), np.float32))
+    buf.invalidate(np.asarray([1]))
+    fresh = buf.fresh_mask(10)
+    assert fresh[0] and not fresh[1] and fresh[2]
+    buf.write(np.asarray([1]), np.zeros((1, 2), np.float32))
+    assert buf.fresh_mask(0)[1]
+
+
+def test_shared_clock_ages_every_buffer_together():
+    clock = VersionClock()
+    a = VersionedBuffer(clock, 4, 2)
+    b = VersionedBuffer(clock, 7, 5)
+    a.write(np.asarray([0]), np.ones((1, 2), np.float32))
+    clock.tick()
+    b.write(np.asarray([3]), np.ones((1, 5), np.float32))
+    assert a.age()[0] == 1 and b.age()[3] == 0
+    clock.tick(2)
+    assert a.age()[0] == 3 and b.age()[3] == 2
+
+
+def test_embedding_cache_rides_the_shared_substrate(graph):
+    """The serving cache's staleness semantics are exactly the buffer's:
+    tick via the shared clock, bounded lookup via fresh_mask."""
+    from repro.serving.cache import EmbeddingCache
+    g = graph("sbm", 120)
+    c = EmbeddingCache(g, [8], policy="degree", capacity=g.num_nodes,
+                       max_staleness=1)
+    assert isinstance(c.vclock, VersionClock)
+    assert all(isinstance(pl, VersionedBuffer) for pl in c.planes.values())
+    ids = np.asarray([1, 2, 3])
+    c.store(0, ids, np.ones((3, 8), np.float32), np.ones(3, bool))
+    assert c.clock == c.vclock.now
+    c.tick()
+    assert c.lookup(0, ids)[1].all()                 # age 1 <= bound 1
+    c.tick()
+    assert not c.lookup(0, ids)[1].any()             # age 2 > bound 1
+
+
+def test_halo_exchange_can_share_a_serving_clock(graph):
+    """One clock can drive both subsystems: a serving tick ages training
+    ghosts and vice versa (the unified-staleness design goal)."""
+    from repro.core.halo import HaloExchange, build_halo
+    from repro.core.partitioning import partition
+    from repro.serving.cache import EmbeddingCache
+    g = graph("sbm", 120)
+    cache = EmbeddingCache(g, [8], policy="degree", max_staleness=2)
+    lay = build_halo(g, partition(g, 2, "hash"))
+    ex = HaloExchange(lay, [8], max_staleness=2, clock=cache.vclock)
+    plan = ex.plan_refresh()                         # ticks the SHARED clock
+    assert cache.clock == 1
+    ex.write_planes(plan, [np.ones((ex.buffers[0].rows, 8), np.float32)])
+    cache.tick(2)
+    # ghost rows were stamped at clock 0; now at 3 they exceed bound 2
+    assert not ex.buffers[0].fresh_mask(2)[ex.ghost_rows].any()
