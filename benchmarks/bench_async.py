@@ -37,27 +37,17 @@ def _payload() -> None:
     """Runs inside the forced-device subprocess; prints one JSON blob."""
     import numpy as np
 
+    from benchmarks.common import build_graph
     from repro.distributed import AsyncFullGraphTrainer
-    from repro.graph import generators as G
     from repro.models.gnn import model as GM
     from repro.models.gnn.model import GNNConfig
     from repro.optim import AdamW
 
     import jax
 
-    def build(name):
-        if name == "er":
-            g = G.erdos_renyi(256, 8.0, seed=0, directed=False)
-            return G.featurize(g, 16, seed=0, num_classes=4)
-        if name == "sbm":
-            g = G.sbm(256, 4, p_in=0.9, p_out=0.02, seed=0)
-            return G.featurize(g, 16, seed=0, class_sep=1.5)
-        from repro.graph.datasets import load
-        return load("reddit-like", seed=0, scale=800 / 233_000).graph
-
     out = {}
     for name in GRAPHS:
-        g = build(name)
+        g = build_graph(name)
         cfg = GNNConfig(arch="gcn", feat_dim=g.features.shape[1],
                         hidden=32, num_classes=g.num_classes)
         params0 = GM.init_gnn(cfg, jax.random.PRNGKey(0))

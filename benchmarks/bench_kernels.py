@@ -1,32 +1,139 @@
-"""Kernel microbench: oracle-path timing on CPU + interpret-mode
-correctness of the Pallas kernels (TPU timing is hardware-gated; the
-kernels' roofline effect is analysed in EXPERIMENTS.md §Perf)."""
+"""Kernel bench: differentiable Pallas aggregation (fused vs unfused vs
+``jax.ops``) on the shared test graphs, plus the flash-attention / SSD
+interpret-mode correctness probes.
+
+For each of er / sbm / reddit-like, the aggregation hot spot
+``out[d] = sum coef_e * h[src_e]`` is timed through a full
+``value_and_grad`` step (fwd + bwd) on three paths:
+
+* ``jax_ops``   — XLA ``jnp.take`` + ``jax.ops.segment_sum`` (oracle);
+* ``unfused``   — XLA gather+scale, then the blocked Pallas scatter
+  kernel (``segment_sum_pallas``) with its gather-kernel VJP;
+* ``fused``     — ``gather_scale_segment_sum_pallas``, one kernel, no
+  (E, F) message tensor in HBM, VJP = swapped fused kernel + edge-dot.
+
+Each path also gets its *modeled* HBM traffic from the analytic models
+in :mod:`repro.kernels.segment_sum` — the roofline quantity the blocked
+tiling is designed around.  Off-TPU the kernels run in interpret mode,
+so ``step_ms`` measures the reference XLA path honestly but the kernel
+paths only relatively; the byte model is backend-independent.  The
+acceptance invariant — fused modeled bytes strictly below unfused on
+every graph — is asserted here, not just reported.
+
+Results land in ``BENCH_kernels.json`` at the repo root (field glossary
+in docs/benchmarks.md) and as the usual ``name,us,derived`` CSV lines.
+"""
+import json
+import os
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit, timeit
+from benchmarks.common import ROOT, build_graph, emit, timeit
 from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention_pallas
-from repro.kernels.segment_sum import segment_sum_pallas
+from repro.kernels.segment_sum import (gather_scale_segment_sum_pallas,
+                                       hbm_bytes_fused_kernel,
+                                       hbm_bytes_jax_ops,
+                                       hbm_bytes_unfused_kernel,
+                                       segment_sum_pallas)
 from repro.kernels.ssd_chunk import ssd_chunk_state_pallas
+
+GRAPHS = ("er", "sbm", "reddit-like")
+FEAT_DIM = 64
+
+
+def _interpret() -> bool:
+    """Resolve per run, like repro.kernels.ops: real kernels on TPU,
+    interpreter elsewhere (recorded in the JSON so readers can tell)."""
+    return jax.default_backend() != "tpu"
+
+
+def _agg_inputs(g, rng):
+    """GCN-normalized aggregation inputs over the full graph."""
+    e = g.edges()
+    src = jnp.asarray(e[:, 0], jnp.int32)
+    dst = jnp.asarray(e[:, 1], jnp.int32)
+    indeg = np.maximum(g.in_degree(), 1).astype(np.float32)
+    outdeg = np.maximum(g.out_degree(), 1).astype(np.float32)
+    coef = jnp.asarray((1 / np.sqrt(outdeg))[e[:, 0]]
+                       * (1 / np.sqrt(indeg))[e[:, 1]])
+    h = jnp.asarray(rng.normal(size=(g.num_nodes, FEAT_DIM)), jnp.float32)
+    return h, src, dst, coef
+
+
+def bench_aggregation() -> dict:
+    rng = np.random.default_rng(0)
+    results = {}
+    for name in GRAPHS:
+        g = build_graph(name)
+        N, E = g.num_nodes, g.num_edges
+        h, src, dst, coef = _agg_inputs(g, rng)
+        w = jnp.asarray(rng.normal(size=(N, FEAT_DIM)), jnp.float32)
+
+        def agg_jax_ops(h_):
+            msgs = jnp.take(h_, src, axis=0) * coef[:, None]
+            return jax.ops.segment_sum(msgs, dst, N)
+
+        def agg_unfused(h_):
+            msgs = jnp.take(h_, src, axis=0) * coef[:, None]
+            return segment_sum_pallas(msgs, dst, N,
+                                      interpret=_interpret())
+
+        def agg_fused(h_):
+            return gather_scale_segment_sum_pallas(h_, src, dst, coef, N,
+                                                   interpret=_interpret())
+
+        paths = {
+            "jax_ops": (agg_jax_ops, hbm_bytes_jax_ops(E, FEAT_DIM, N)),
+            "unfused": (agg_unfused,
+                        hbm_bytes_unfused_kernel(E, FEAT_DIM, N)),
+            "fused": (agg_fused,
+                      hbm_bytes_fused_kernel(E, FEAT_DIM, N, N)),
+        }
+
+        row = {"num_nodes": N, "num_edges": E, "paths": {}}
+        ref_out = agg_jax_ops(h)
+        for pname, (fn, bytes_model) in paths.items():
+            step = jax.jit(jax.value_and_grad(
+                lambda h_, fn=fn: jnp.sum(fn(h_) * w)))
+            jax.block_until_ready(step(h))          # compile outside timer
+            us = timeit(lambda: jax.block_until_ready(step(h)), iters=3)
+            maxerr = float(jnp.max(jnp.abs(fn(h) - ref_out)))
+            row["paths"][pname] = {
+                "fwd_bwd_ms": us / 1e3,
+                "hbm_bytes_fwd": bytes_model["fwd"],
+                "hbm_bytes_bwd": bytes_model["bwd"],
+                "hbm_bytes": bytes_model["total"],
+                "max_err_vs_jax_ops": maxerr,
+            }
+            emit(f"kernels/agg_{name}_{pname}", us,
+                 f"E={E};F={FEAT_DIM};hbm_model_bytes="
+                 f"{bytes_model['total']};maxerr={maxerr:.2e}")
+        fused_b = row["paths"]["fused"]["hbm_bytes"]
+        unfused_b = row["paths"]["unfused"]["hbm_bytes"]
+        assert fused_b < unfused_b, (
+            f"{name}: fused modeled HBM bytes {fused_b} not below "
+            f"unfused {unfused_b}")
+        row["fused_traffic_saving"] = 1.0 - fused_b / unfused_b
+        emit(f"kernels/agg_{name}_fused_saving", 0.0,
+             f"saving={row['fused_traffic_saving']:.2%}")
+        results[name] = row
+    return results
 
 
 def main():
     rng = np.random.default_rng(0)
 
-    # segment sum
-    E, F, N = 20000, 128, 2048
-    msgs = jnp.asarray(rng.normal(size=(E, F)), jnp.float32)
-    ids = jnp.asarray(rng.integers(0, N, E), jnp.int32)
-    oracle = jax.jit(lambda m: ref.segment_sum(m, ids, N))
-    jax.block_until_ready(oracle(msgs))
-    emit("kernels/segment_sum/oracle_xla",
-         timeit(lambda: jax.block_until_ready(oracle(msgs))), f"E={E};F={F}")
-    err = float(jnp.max(jnp.abs(
-        segment_sum_pallas(msgs[:512], ids[:512], N)
-        - ref.segment_sum(msgs[:512], ids[:512], N))))
-    emit("kernels/segment_sum/pallas_interpret", 0.0, f"maxerr={err:.2e}")
+    results = bench_aggregation()
+    path = os.path.join(ROOT, "BENCH_kernels.json")
+    with open(path, "w") as f:
+        json.dump({"feat_dim": FEAT_DIM,
+                   "backend": jax.default_backend(),
+                   "interpret": _interpret(),
+                   "results": results},
+                  f, indent=2, sort_keys=True)
 
     # flash attention
     B, H, K, S, hd = 1, 8, 2, 512, 64

@@ -10,6 +10,23 @@ ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 SRC = os.path.join(ROOT, "src")
 
 
+def build_graph(name: str, *, seed: int = 0):
+    """The shared er / sbm / reddit-like benchmark graph suite (same
+    shapes as tests/conftest.py), so cross-bench numbers stay
+    apples-to-apples.  Requires ``repro`` on the path."""
+    from repro.graph import generators as G
+    if name == "er":
+        g = G.erdos_renyi(256, 8.0, seed=seed, directed=False)
+        return G.featurize(g, 16, seed=seed, num_classes=4)
+    if name == "sbm":
+        g = G.sbm(256, 4, p_in=0.9, p_out=0.02, seed=seed)
+        return G.featurize(g, 16, seed=seed, class_sep=1.5)
+    if name == "reddit-like":
+        from repro.graph.datasets import load
+        return load("reddit-like", seed=seed, scale=800 / 233_000).graph
+    raise KeyError(f"unknown benchmark graph family {name!r}")
+
+
 def timeit(fn, *, warmup: int = 1, iters: int = 5) -> float:
     """Median wall time in microseconds."""
     for _ in range(warmup):

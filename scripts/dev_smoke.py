@@ -21,6 +21,8 @@ from repro.optim import AdamW
 EXTRA_STAGES = {
     "serve_gnn": "online GNN inference serving smoke (repro.serving)",
     "dist_gnn": "2-device mini-batch gradient-equivalence subprocess",
+    "kernels": "2-device Pallas-kernel grad-equivalence subprocess "
+               "(interpret mode)",
     "docs": "markdown links + public-API docstrings (scripts/check_docs.py)",
 }
 
@@ -36,6 +38,7 @@ if any(a in ("-h", "--help") for a in sys.argv[1:]):
 ONLY = sys.argv[1:] if len(sys.argv) > 1 else None
 RUN_SERVING = ONLY is None or "serve_gnn" in ONLY
 RUN_DIST = ONLY is None or "dist_gnn" in ONLY
+RUN_KERNELS = ONLY is None or "kernels" in ONLY
 RUN_DOCS = ONLY is None or "docs" in ONLY
 ARCHES = [a for a in (ONLY or ARCH_IDS) if a not in EXTRA_STAGES]
 
@@ -132,10 +135,10 @@ if RUN_SERVING:
     print(f"OK {'serve_gnn':24s} rps={s['throughput_rps']:.0f} "
           f"p99={s['p99_ms']:.2f}ms hit={s['embedding_hit_ratio']:.2%}")
 
-if RUN_DIST:
-    # distributed mini-batch path: the 2-device gradient-equivalence check
-    # in a subprocess (device count is fixed at jax import, so the forced
-    # multi-host topology cannot run in this process)
+def run_subprocess_check(label, script, args, marker):
+    """Run a tests/*_check.py equivalence script in a clean subprocess
+    (device count is fixed at jax import, so forced multi-host
+    topologies cannot run in this process) and assert its PASS marker."""
     import os
     import subprocess
 
@@ -144,13 +147,25 @@ if RUN_DIST:
     env["PYTHONPATH"] = os.path.join(root, "src")
     env.pop("XLA_FLAGS", None)
     r = subprocess.run(
-        [sys.executable,
-         os.path.join(root, "tests", "distributed_train_check.py"),
-         "2", "hash", "sage"],
+        [sys.executable, os.path.join(root, "tests", script), *args],
         capture_output=True, text=True, timeout=600, env=env)
     assert r.returncode == 0, r.stdout + r.stderr
-    assert "PASS dist-equivalence" in r.stdout, r.stdout
-    print(f"OK {'dist_gnn':24s} {r.stdout.strip().splitlines()[-1]}")
+    assert marker in r.stdout, r.stdout
+    print(f"OK {label:24s} {r.stdout.strip().splitlines()[-1]}")
+
+
+if RUN_DIST:
+    # distributed mini-batch path: 2-device gradient equivalence
+    run_subprocess_check("dist_gnn", "distributed_train_check.py",
+                         ["2", "hash", "sage"], "PASS dist-equivalence")
+
+if RUN_KERNELS:
+    # differentiable Pallas aggregation: jax.grad through the fused
+    # kernel (interpret mode) must reproduce the jax.ops reference step
+    # for step on a forced 2-device mesh — CPU-only CI exercises the
+    # kernel bodies + custom VJPs every run
+    run_subprocess_check("kernels", "kernel_train_check.py",
+                         ["2", "hash"], "PASS kernel-equivalence")
 
 if RUN_DOCS:
     # docs tier: intra-repo markdown links resolve and every exported

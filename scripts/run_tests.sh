@@ -4,6 +4,9 @@
 #   scripts/run_tests.sh            # tier1: the default fast suite
 #   scripts/run_tests.sh tier2      # slow + distributed matrix (subprocess,
 #                                   # forced multi-device)
+#   scripts/run_tests.sh kernels    # Pallas-kernel grad-equivalence checks
+#                                   # in interpret mode (CPU-only CI runs
+#                                   # the kernel bodies + custom VJPs)
 #   scripts/run_tests.sh docs       # intra-repo markdown links + public-API
 #                                   # docstrings (scripts/check_docs.py)
 #   scripts/run_tests.sh all        # everything
@@ -16,7 +19,11 @@ shift || true
 case "$tier" in
   tier1) exec python -m pytest -q -m "not slow and not distributed" "$@" ;;
   tier2) exec python -m pytest -q -m "slow or distributed" "$@" ;;
+  kernels)
+    python tests/kernel_train_check.py 1 hash "$@"
+    exec python tests/kernel_train_check.py 2 hash "$@" ;;
   docs)  exec python scripts/check_docs.py "$@" ;;
   all)   exec python -m pytest -q "$@" ;;
-  *) echo "usage: $0 [tier1|tier2|docs|all] [pytest args...]" >&2; exit 2 ;;
+  *) echo "usage: $0 [tier1|tier2|kernels|docs|all] [pytest args...]" >&2
+     exit 2 ;;
 esac

@@ -76,31 +76,66 @@ jax.tree_util.register_dataclass(
 # ---------------------------------------------------------------------------
 
 def segment_sum(msgs, seg_ids, num_segments, *, use_kernel: bool = False):
+    """Gather-step segment reduction: ``jax.ops.segment_sum`` oracle or
+    the differentiable blocked Pallas kernel (``use_kernel=True``)."""
     if use_kernel:
         from repro.kernels import ops as kops
+        if msgs.ndim == 1:          # e.g. per-edge scalars/logits
+            return kops.segment_sum(msgs[:, None], seg_ids,
+                                    num_segments)[:, 0]
         return kops.segment_sum(msgs, seg_ids, num_segments)
     return jax.ops.segment_sum(msgs, seg_ids, num_segments)
 
 
-def segment_mean(msgs, seg_ids, num_segments, deg):
-    s = segment_sum(msgs, seg_ids, num_segments)
+def gather_scale_segment_sum(h, edge_src, edge_dst, coef, num_dst, *,
+                             use_kernel: bool = False):
+    """Fused Scatter -> ApplyEdge(scale) -> Gather:
+    ``out[d] = sum_{e: edge_dst[e]=d} coef[e] * h[edge_src[e]]``.
+
+    ``coef`` is the per-edge coefficient with the validity mask folded in
+    (masked/pad edges carry 0).  With ``use_kernel=True`` this runs as
+    ONE Pallas kernel that never materializes the (E, F) message tensor
+    in HBM (see :mod:`repro.kernels.segment_sum`); the reference path
+    spells out the same computation in XLA ops.
+    """
+    if use_kernel:
+        from repro.kernels import ops as kops
+        return kops.gather_scale_segment_sum(h, edge_src, edge_dst,
+                                             coef, num_dst)
+    msgs = jnp.take(h, edge_src, axis=0) * coef[:, None]
+    return jax.ops.segment_sum(msgs, edge_dst, num_dst)
+
+
+def segment_mean(msgs, seg_ids, num_segments, deg, *,
+                 use_kernel: bool = False):
+    """Degree-normalized segment reduction (``use_kernel`` forwarded to
+    the underlying :func:`segment_sum`)."""
+    s = segment_sum(msgs, seg_ids, num_segments, use_kernel=use_kernel)
     return s / deg[:, None]
 
 
 def segment_max(msgs, seg_ids, num_segments):
+    # no Pallas counterpart: max has no MXU-friendly one-hot form and is
+    # never the hot path (GAT uses it once for numerical stability)
     return jax.ops.segment_max(msgs, seg_ids, num_segments,
                                indices_are_sorted=False)
 
 
-def segment_softmax(logits, seg_ids, num_segments, mask):
-    """Per-destination softmax over incoming edges (GAT)."""
+def segment_softmax(logits, seg_ids, num_segments, mask, *,
+                    use_kernel: bool = False):
+    """Per-destination softmax over incoming edges (GAT).
+
+    ``use_kernel`` reaches the denominator's :func:`segment_sum` too, so
+    a kernel-mode GAT runs every reduction through the Pallas path (the
+    max for numerical stability stays ``jax.ops.segment_max``).
+    """
     neg = jnp.asarray(-1e30, logits.dtype)
     logits = jnp.where(mask[:, None] if logits.ndim > 1 else mask,
                        logits, neg)
     mx = segment_max(logits, seg_ids, num_segments)
     ex = jnp.exp(logits - mx[seg_ids])
     ex = ex * (mask[:, None] if logits.ndim > 1 else mask)
-    den = segment_sum(ex, seg_ids, num_segments)
+    den = segment_sum(ex, seg_ids, num_segments, use_kernel=use_kernel)
     return ex / (den[seg_ids] + 1e-9)
 
 
@@ -132,7 +167,8 @@ def saga_layer(g: DeviceGraph,
         agg = segment_sum(msgs, g.edge_dst, g.num_dst,
                           use_kernel=use_kernel)
     elif gather == "mean":
-        agg = segment_mean(msgs, g.edge_dst, g.num_dst, g.in_deg)
+        agg = segment_mean(msgs, g.edge_dst, g.num_dst, g.in_deg,
+                           use_kernel=use_kernel)
     elif gather == "max":
         agg = segment_max(msgs, g.edge_dst, g.num_dst)
         agg = jnp.where(jnp.isfinite(agg), agg, 0.0)

@@ -30,7 +30,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
 from repro.core import partitioning as part_mod
-from repro.core.abstraction import DeviceGraph
+from repro.core.abstraction import DeviceGraph, gather_scale_segment_sum
 from repro.graph.structure import Graph
 
 AXIS = "g"
@@ -139,7 +139,7 @@ def shard_graph(g: Graph, n_dev: int, *, method: str = "hash",
 # ---------------------------------------------------------------------------
 
 def pull_aggregate(h_loc, edge_src_g, edge_dst_l, edge_mask, n_local,
-                   *, coef_e=None):
+                   *, coef_e=None, use_kernel=False):
     """All-gather features, local segment-sum onto owned destinations.
 
     Args (inside shard_map over ``"g"``): ``h_loc`` ``(n_local, F)`` owned
@@ -147,28 +147,30 @@ def pull_aggregate(h_loc, edge_src_g, edge_dst_l, edge_mask, n_local,
     ``edge_mask`` validity for this device's ``(E_loc,)`` edge slice;
     ``coef_e`` optional per-edge coefficient.  Returns ``(n_local, F)``
     aggregates; masked (pad) edges contribute zero, so pad rows never
-    aggregate."""
+    aggregate.  ``use_kernel=True`` runs gather+scale+reduce as one fused
+    Pallas kernel (no (E, F) message tensor in HBM)."""
     h_all = jax.lax.all_gather(h_loc, AXIS, tiled=True)     # (N_pad, F)
-    feat = jnp.take(h_all, edge_src_g, axis=0)
+    coef = edge_mask.astype(h_all.dtype)
     if coef_e is not None:
-        feat = feat * coef_e[:, None]
-    feat = feat * edge_mask[:, None].astype(feat.dtype)
-    return jax.ops.segment_sum(feat, edge_dst_l, n_local)
+        coef = coef * coef_e
+    return gather_scale_segment_sum(h_all, edge_src_g, edge_dst_l, coef,
+                                    n_local, use_kernel=use_kernel)
 
 
 def push_aggregate(h_loc, edge_src_l, edge_dst_g, edge_mask, n_pad,
-                   *, coef_e=None):
+                   *, coef_e=None, use_kernel=False):
     """Local partial aggregates for ALL destinations, reduce-scatter.
 
     Args mirror :func:`pull_aggregate` with the dual layout: ``edge_src_l``
     local src ids, ``edge_dst_g`` global dst ids, ``n_pad`` the padded
     global row count.  Returns this device's ``(n_local, F)`` slice of the
     psum_scattered aggregate; masked edges contribute zero."""
-    feat = jnp.take(h_loc, edge_src_l, axis=0)
+    coef = edge_mask.astype(h_loc.dtype)
     if coef_e is not None:
-        feat = feat * coef_e[:, None]
-    feat = feat * edge_mask[:, None].astype(feat.dtype)
-    partial = jax.ops.segment_sum(feat, edge_dst_g, n_pad)  # (N_pad, F)
+        coef = coef * coef_e
+    partial = gather_scale_segment_sum(h_loc, edge_src_l, edge_dst_g,
+                                       coef, n_pad,
+                                       use_kernel=use_kernel)
     return jax.lax.psum_scatter(partial, AXIS, scatter_dimension=0,
                                 tiled=True)                 # (N_loc, F)
 
@@ -202,9 +204,12 @@ def push_layout(sg: ShardedGraph, g: Graph) -> dict:
 # distributed GCN training step (pull | push | stale-pull)
 # ---------------------------------------------------------------------------
 
-def gcn_forward_local(params, h_loc, sg_local, *, mode, halo_cache=None):
+def gcn_forward_local(params, h_loc, sg_local, *, mode, halo_cache=None,
+                      use_kernel=False):
     """Runs inside shard_map.  ``sg_local`` holds per-device edge slices and
-    degree vectors; GCN normalization 1/sqrt(d_out d_in) per edge."""
+    degree vectors; GCN normalization 1/sqrt(d_out d_in) per edge.
+    ``use_kernel`` routes each layer's aggregation through the fused
+    Pallas gather-scale-segment-sum kernel."""
     (es, ed, em, indeg_l, outdeg_all, n_local) = sg_local
     h = h_loc
     n_layers = len(params)
@@ -220,8 +225,8 @@ def gcn_forward_local(params, h_loc, sg_local, *, mode, halo_cache=None):
             h_all = jax.lax.all_gather(hw, AXIS, tiled=True)
         coef = (jax.lax.rsqrt(jnp.take(outdeg_all, es))
                 * jax.lax.rsqrt(jnp.take(indeg_l, ed)))
-        feat = jnp.take(h_all, es, axis=0) * (coef * em)[:, None]
-        agg = jax.ops.segment_sum(feat, ed, n_local)
+        agg = gather_scale_segment_sum(h_all, es, ed, coef * em, n_local,
+                                       use_kernel=use_kernel)
         h = agg + p["b"]
         if i + 1 < n_layers:
             h = jax.nn.relu(h)
@@ -229,7 +234,7 @@ def gcn_forward_local(params, h_loc, sg_local, *, mode, halo_cache=None):
 
 
 def gcn_forward_push(params, h_loc, push_arrays, outdeg_all, indeg_l,
-                     n_local, n_dev):
+                     n_local, n_dev, *, use_kernel=False):
     """Push-mode GCN forward (Pregel/NeuGraph): each device computes its
     LOCAL sources' contributions for every destination and reduce-scatters
     partial aggregates."""
@@ -246,19 +251,26 @@ def gcn_forward_push(params, h_loc, push_arrays, outdeg_all, indeg_l,
         indeg_all = jax.lax.all_gather(indeg_l, AXIS, tiled=True)
         coef = (jax.lax.rsqrt(jnp.take(outdeg_l, es_l))
                 * jax.lax.rsqrt(jnp.take(indeg_all, ed_g)))
-        h = push_aggregate(hw, es_l, ed_g, em.astype(hw.dtype) * coef,
-                           n_pad) + p["b"]
+        h = push_aggregate(hw, es_l, ed_g, em, n_pad, coef_e=coef,
+                           use_kernel=use_kernel) + p["b"]
         if i + 1 < n_layers:
             h = jax.nn.relu(h)
     return h
 
 
-def make_distributed_gcn_step(optimizer, n_dev: int, *, mode: str = "pull"):
+def make_distributed_gcn_step(optimizer, n_dev: int, *, mode: str = "pull",
+                              use_kernel: bool = False):
     """Returns (mesh, train_step) for full-graph distributed GCN.
 
     mode: "pull" (all-gather features), "stale" (DistGNN delayed halos) or
     "push" (reduce-scatter partial aggregates; requires push-layout edges
-    passed via ``train_step(..., push_arrays=...)``).
+    passed via ``train_step(..., push_arrays=...)``).  ``use_kernel``
+    runs every layer's aggregation through the differentiable Pallas
+    kernels — fused while the (all-gathered) source slab fits VMEM
+    (``repro.kernels.segment_sum.fused_fits``), else the unfused blocked
+    kernel, dispatched automatically; the gradient-equivalence matrix in
+    ``tests/kernel_train_check.py`` proves the kernel path matches this
+    reference to <= 1e-5 per parameter.
 
     train_step(params, opt_state, sg_arrays...) -> (params, opt_state, loss)
     with all graph arrays sharded over axis "g".  Gradients are psum'd
@@ -281,7 +293,8 @@ def make_distributed_gcn_step(optimizer, n_dev: int, *, mode: str = "pull"):
 
             def loss_fn(p):
                 h = gcn_forward_push(p, x, (es_l, ed_g, em), outdeg,
-                                     indeg, n_local, n_dev)
+                                     indeg, n_local, n_dev,
+                                     use_kernel=use_kernel)
                 logz = jax.nn.logsumexp(h, axis=-1)
                 gold = jnp.take_along_axis(h, labels[:, None],
                                            axis=-1)[:, 0]
@@ -322,7 +335,7 @@ def make_distributed_gcn_step(optimizer, n_dev: int, *, mode: str = "pull"):
         def loss_fn(p):
             h = gcn_forward_local(
                 p, x, (es, ed, em, indeg_l, outdeg_all, n_local),
-                mode=mode, halo_cache=halo_cache)
+                mode=mode, halo_cache=halo_cache, use_kernel=use_kernel)
             logz = jax.nn.logsumexp(h, axis=-1)
             gold = jnp.take_along_axis(h, labels[:, None], axis=-1)[:, 0]
             return jnp.sum((logz - gold) * lmask) / cnt

@@ -83,7 +83,8 @@ def exchange_for_shards(g: Graph, sg: ShardedGraph,
                         n_rows=sg.n_local * sg.n_dev, clock=clock)
 
 
-def make_async_fullgraph_step(optimizer, n_dev: int):
+def make_async_fullgraph_step(optimizer, n_dev: int, *,
+                              use_kernel: bool = False):
     """Build the jitted staleness-bounded full-graph GCN step.
 
     Returns ``(mesh, train_step)`` where::
@@ -98,6 +99,8 @@ def make_async_fullgraph_step(optimizer, n_dev: int):
     back.  Params/opt_state replicated, graph arrays sharded over mesh
     axis ``"g"``, gradients psum'd — identical conventions to
     :func:`repro.core.propagation.make_distributed_gcn_step`.
+    ``use_kernel`` runs every layer's aggregation through the fused
+    Pallas gather-scale-segment-sum kernel.
     """
     mesh = Mesh(np.array(jax.devices()[:n_dev]), (AXIS,))
 
@@ -115,7 +118,7 @@ def make_async_fullgraph_step(optimizer, n_dev: int):
         def loss_fn(p):
             h, planes = GM.forward_stale(
                 p, x, (es, ed, em, indeg, outdeg, n_local), ghosts,
-                refresh, own_rows, axis=AXIS)
+                refresh, own_rows, axis=AXIS, use_kernel=use_kernel)
             logz = jax.nn.logsumexp(h, axis=-1)
             gold = jnp.take_along_axis(h, labels[:, None], axis=-1)[:, 0]
             return jnp.sum((logz - gold) * lmask) / cnt, planes
@@ -157,7 +160,8 @@ class AsyncFullGraphTrainer:
     Args:
         g: the training graph (features + labels required).
         cfg: GCN config (``arch="gcn"``; the full-graph shard_map path is
-            GCN-specific, like the synchronous one).
+            GCN-specific, like the synchronous one).  ``cfg.use_kernel``
+            routes aggregation through the fused Pallas kernel.
         optimizer: an ``optim``-style optimizer (``init``/``apply``).
         n_dev: mesh size (one partition per device).
         partitioner: edge-cut method name (``hash``/``ldg``/``fennel``).
@@ -180,7 +184,8 @@ class AsyncFullGraphTrainer:
         self.exchange = exchange_for_shards(
             g, self.sg, layer_dims, max_staleness=staleness,
             refresh_frac=refresh_frac)
-        self.mesh, self.step = make_async_fullgraph_step(optimizer, n_dev)
+        self.mesh, self.step = make_async_fullgraph_step(
+            optimizer, n_dev, use_kernel=cfg.use_kernel)
         self.steps_run = 0
         self.consumed_bytes = 0
         self.consumed_rows = 0

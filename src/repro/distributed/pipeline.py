@@ -126,6 +126,11 @@ def make_distributed_minibatch_step(cfg: GNNConfig, optimizer, n_dev: int,
     train_step(params, opt_state, arrays) -> (params, opt_state, loss)
     with ``arrays`` from :func:`collate`; params/opt_state replicated,
     gradients psum'd over ``"g"`` (decentralized all-reduce).
+
+    ``cfg.use_kernel=True`` runs every block layer's aggregation through
+    the differentiable Pallas kernels (``forward_blocks`` forwards the
+    flag into each layer, including GAT's softmax denominator) — wire it
+    from ``train_gnn --use-kernel``.
     """
     mesh = Mesh(np.array(jax.devices()[:n_dev]), (AXIS,))
     caps = list(caps)

@@ -1,14 +1,25 @@
 """jit'd public wrappers for the Pallas kernels.
 
 ``interpret`` defaults to True off-TPU (this container is CPU-only; the
-kernels TARGET TPU — see DESIGN.md).  On a TPU backend the same call sites
-compile the real kernels.
+kernels TARGET TPU — see DESIGN.md).  On a TPU backend the same call
+sites compile the real kernels.
+
+The backend is resolved *per call* in a plain-Python wrapper and passed
+into the jit as a static argument.  (The previous design read
+``jax.default_backend()`` at first trace inside an ``@jax.jit`` body;
+the jit cache never revisits a traced constant, so a process that traced
+once on CPU — e.g. an import-time warmup before TPU init — silently
+pinned interpret mode for its whole lifetime.)  A caller that embeds
+these wrappers inside its own ``jit`` still resolves the backend at its
+own trace time, which is the earliest point a backend exists for it.
 """
 from __future__ import annotations
 
 import functools
+import warnings
 
 import jax
+import jax.numpy as jnp
 
 from repro.kernels import flash_attention as _fa
 from repro.kernels import segment_sum as _ss
@@ -19,19 +30,86 @@ def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
-@functools.partial(jax.jit, static_argnames=("num_segments",))
-def segment_sum(msgs, seg_ids, num_segments: int):
+@functools.partial(jax.jit, static_argnames=("num_segments", "interpret"))
+def _segment_sum_jit(msgs, seg_ids, num_segments: int, interpret: bool):
     return _ss.segment_sum_pallas(msgs, seg_ids, num_segments,
-                                  interpret=not _on_tpu())
+                                  interpret=interpret)
 
 
-@functools.partial(jax.jit, static_argnames=("causal", "window"))
+def segment_sum(msgs, seg_ids, num_segments: int):
+    """Differentiable blocked segment-sum (scatter-add); the VJP is a
+    blocked gather kernel.  See :mod:`repro.kernels.segment_sum`."""
+    return _segment_sum_jit(msgs, seg_ids, num_segments,
+                            interpret=not _on_tpu())
+
+
+@functools.partial(jax.jit, static_argnames=("num_dst", "interpret"))
+def _gss_jit(h, edge_src, edge_dst, coef, num_dst: int, interpret: bool):
+    return _ss.gather_scale_segment_sum_pallas(h, edge_src, edge_dst,
+                                               coef, num_dst,
+                                               interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("num_dst", "interpret"))
+def _gss_unfused_jit(h, edge_src, edge_dst, coef, num_dst: int,
+                     interpret: bool):
+    msgs = jnp.take(h, edge_src, axis=0) * coef[:, None]
+    return _ss.segment_sum_pallas(msgs, edge_dst, num_dst,
+                                  interpret=interpret)
+
+
+_fallback_warned: set = set()
+
+
+def gather_scale_segment_sum(h, edge_src, edge_dst, coef, num_dst: int):
+    """Fused differentiable gather -> per-edge scale -> segment-sum:
+    ``out[d] = sum_{e: edge_dst[e]=d} coef[e] * h[edge_src[e]]`` without
+    materializing the (E, F) message tensor in HBM.  Fold the edge mask
+    into ``coef``.
+
+    Capacity dispatch: the fused kernel keeps an (S, BF) source slab
+    VMEM-resident, which stops fitting somewhere in the thousands of
+    rows (exact bound depends on F).  When
+    :func:`repro.kernels.segment_sum.fused_fits` says no — e.g. a large
+    single-device full graph, where the distributed layouts would have
+    sharded the rows — this falls back to XLA gather+scale feeding the
+    blocked scatter kernel, whose working set is row-count independent,
+    so ``use_kernel=True`` never hits the VMEM assert from this path.
+    """
+    S, F = h.shape
+    interpret = not _on_tpu()
+    if not _ss.fused_fits(S, num_dst, F):
+        key = (S, num_dst, F)
+        if key not in _fallback_warned:      # surface the dispatch once
+            _fallback_warned.add(key)
+            warnings.warn(
+                f"gather_scale_segment_sum: fused-kernel VMEM slab for "
+                f"num_src={S}, num_dst={num_dst}, F={F} exceeds the "
+                f"budget; dispatching to the unfused blocked kernel "
+                f"(the (E, F) message tensor WILL cross HBM)")
+        return _gss_unfused_jit(h, edge_src, edge_dst, coef, num_dst,
+                                interpret=interpret)
+    return _gss_jit(h, edge_src, edge_dst, coef, num_dst,
+                    interpret=interpret)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("causal", "window", "interpret"))
+def _flash_attention_jit(q, k, v, causal: bool, window: int,
+                         interpret: bool):
+    return _fa.flash_attention_pallas(q, k, v, causal=causal,
+                                      window=window, interpret=interpret)
+
+
 def flash_attention(q, k, v, *, causal: bool = True, window: int = 0):
-    return _fa.flash_attention_pallas(q, k, v, causal=causal, window=window,
-                                      interpret=not _on_tpu())
+    return _flash_attention_jit(q, k, v, causal, window,
+                                interpret=not _on_tpu())
 
 
-@functools.partial(jax.jit)
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _ssd_chunk_state_jit(x, dt, A, Bm, interpret: bool):
+    return _ssd.ssd_chunk_state_pallas(x, dt, A, Bm, interpret=interpret)
+
+
 def ssd_chunk_state(x, dt, A, Bm):
-    return _ssd.ssd_chunk_state_pallas(x, dt, A, Bm,
-                                       interpret=not _on_tpu())
+    return _ssd_chunk_state_jit(x, dt, A, Bm, interpret=not _on_tpu())

@@ -7,10 +7,12 @@ per-layer ghost buffers, ``--staleness S`` age bound, ``--refresh-frac F``
 budget); mini-batch mode runs a selectable sampler + caching policy —
 single-device, or partition-parallel when ``--minibatch --devices N``
 (repro.distributed: halo-cached remote fetches, double-buffered prefetch,
-shard_map psum step).
+shard_map psum step).  ``--use-kernel`` routes every path's Gather step
+through the differentiable fused Pallas aggregation kernels
+(``repro.kernels``; interpret mode off-TPU, same numbers to <= 1e-5).
 
   PYTHONPATH=src python -m repro.launch.train_gnn --devices 8 \
-      --partitioner ldg --mode pull --epochs 30
+      --partitioner ldg --mode pull --epochs 30 --use-kernel
   PYTHONPATH=src python -m repro.launch.train_gnn --fullgraph --devices 4 \
       --staleness 2 --refresh-frac 0.05 --epochs 30
   PYTHONPATH=src python -m repro.launch.train_gnn --minibatch \
@@ -66,6 +68,10 @@ def parse_args(argv=None):
     ap.add_argument("--cache", default="degree",
                     choices=["none", "degree", "importance", "random"])
     ap.add_argument("--batch", type=int, default=64)
+    ap.add_argument("--use-kernel", action="store_true",
+                    help="run every aggregation (the Gather hot spot) "
+                         "through the differentiable fused Pallas "
+                         "kernels (interpret mode off-TPU)")
     ap.add_argument("--seed", type=int, default=0)
     return ap.parse_args(argv)
 
@@ -120,7 +126,8 @@ def main(argv=None):
           f"{g.num_classes} classes; devices={jax.device_count()}")
 
     cfg = GNNConfig(arch=args.arch, feat_dim=feat_dim,
-                    hidden=args.hidden, num_classes=g.num_classes)
+                    hidden=args.hidden, num_classes=g.num_classes,
+                    use_kernel=args.use_kernel)
     params = GM.init_gnn(cfg, jax.random.PRNGKey(args.seed))
     opt = AdamW(lr=args.lr, weight_decay=0.0)
     ostate = opt.init(params)
@@ -178,8 +185,8 @@ def main(argv=None):
 
         if args.mode == "push":
             push_arrays = PR.push_layout(sg, g)
-            mesh, step = PR.make_distributed_gcn_step(opt, n_dev,
-                                                      mode="push")
+            mesh, step = PR.make_distributed_gcn_step(
+                opt, n_dev, mode="push", use_kernel=args.use_kernel)
             for epoch in range(args.epochs):
                 params, ostate, loss = step(params, ostate, sg,
                                             push_arrays=push_arrays)
@@ -189,7 +196,8 @@ def main(argv=None):
 
         stale_like = args.mode in ("stale", "hysync")
         mesh, step = PR.make_distributed_gcn_step(
-            opt, n_dev, mode="stale" if stale_like else "pull")
+            opt, n_dev, mode="stale" if stale_like else "pull",
+            use_kernel=args.use_kernel)
         hysync = HysyncController(stale_s=args.staleness) \
             if args.mode == "hysync" else None
         policy = SyncPolicy(mode="stale" if stale_like else "bsp",

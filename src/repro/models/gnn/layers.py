@@ -8,6 +8,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.abstraction import (DeviceGraph, MessagePassing,
+                                    gather_scale_segment_sum,
                                     segment_softmax, segment_sum)
 
 
@@ -33,10 +34,12 @@ class GCNLayer(MessagePassing):
         h = x_src @ p["w"]
         norm_src = jax.lax.rsqrt(g.out_deg)
         norm_dst = jax.lax.rsqrt(g.in_deg)
-        feat_e = jnp.take(h, g.edge_src, axis=0)
         coef = jnp.take(norm_src, g.edge_src) * jnp.take(norm_dst, g.edge_dst)
-        msgs = feat_e * (coef * g.edge_mask)[:, None]
-        agg = segment_sum(msgs, g.edge_dst, g.num_dst, use_kernel=use_kernel)
+        # fused gather+scale+reduce: the (E, F) message tensor only ever
+        # exists tile-by-tile in VMEM on the kernel path
+        agg = gather_scale_segment_sum(h, g.edge_src, g.edge_dst,
+                                       coef * g.edge_mask, g.num_dst,
+                                       use_kernel=use_kernel)
         return agg + p["b"]
 
 
@@ -82,7 +85,8 @@ class GATLayer(MessagePassing):
         logits = jax.nn.leaky_relu(
             jnp.take(es, g.edge_src, axis=0)
             + jnp.take(ed, g.edge_dst, axis=0), 0.2)        # (E, heads)
-        alpha = segment_softmax(logits, g.edge_dst, g.num_dst, g.edge_mask)
+        alpha = segment_softmax(logits, g.edge_dst, g.num_dst, g.edge_mask,
+                                use_kernel=use_kernel)
         msgs = jnp.take(hs, g.edge_src, axis=0) * alpha[..., None]
         agg = segment_sum(msgs.reshape(-1, heads * hd), g.edge_dst,
                           g.num_dst, use_kernel=use_kernel)
@@ -130,10 +134,11 @@ class GGNNLayer(MessagePassing):
             x_src = x_src @ p["proj"]
         if x_dst is None:
             x_dst = x_src[:g.num_dst]
-        msgs = jnp.take(x_src @ p["w_msg"], g.edge_src, axis=0)
-        msgs = msgs * g.edge_mask[:, None].astype(msgs.dtype)
-        agg = segment_sum(msgs, g.edge_dst, g.num_dst,
-                          use_kernel=use_kernel)
+        hm = x_src @ p["w_msg"]
+        agg = gather_scale_segment_sum(
+            hm, g.edge_src, g.edge_dst,
+            g.edge_mask.astype(hm.dtype), g.num_dst,
+            use_kernel=use_kernel)
         d = x_dst.shape[-1]
         gates = agg @ p["w_zrh"] + x_dst @ p["u_zrh"] + p["b"]
         z = jax.nn.sigmoid(gates[:, :d])
@@ -160,9 +165,8 @@ class APPNPLayer(MessagePassing):
     def propagate(self, g, h, h0, *, use_kernel=False):
         coef = (jax.lax.rsqrt(g.out_deg)[g.edge_src]
                 * jax.lax.rsqrt(g.in_deg)[g.edge_dst] * g.edge_mask)
-        msgs = jnp.take(h, g.edge_src, axis=0) * coef[:, None]
-        agg = segment_sum(msgs, g.edge_dst, g.num_dst,
-                          use_kernel=use_kernel)
+        agg = gather_scale_segment_sum(h, g.edge_src, g.edge_dst, coef,
+                                       g.num_dst, use_kernel=use_kernel)
         return (1 - self.alpha) * agg + self.alpha * h0
 
 

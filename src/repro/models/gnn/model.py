@@ -10,7 +10,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.abstraction import DeviceGraph
+from repro.core.abstraction import DeviceGraph, gather_scale_segment_sum
 from repro.models.gnn.layers import LAYER_TYPES, GATLayer
 
 
@@ -88,7 +88,7 @@ def forward_blocks(cfg: GNNConfig, params, blocks: Sequence[DeviceGraph],
 
 
 def forward_stale(params, h_own, sg_local, ghosts, refresh, own_rows,
-                  *, axis: str = "g"):
+                  *, axis: str = "g", use_kernel: bool = False):
     """Staleness-bounded full-graph GCN forward (runs under ``shard_map``).
 
     The asynchronous counterpart of
@@ -113,6 +113,9 @@ def forward_stale(params, h_own, sg_local, ghosts, refresh, own_rows,
             exactly to the synchronous pull forward.
         own_rows: ``(N_pad,)`` bool — rows this device owns (always fresh).
         axis: mesh axis name (default ``"g"``).
+        use_kernel: aggregate through the fused Pallas
+            gather-scale-segment-sum kernel instead of XLA take +
+            ``jax.ops.segment_sum``.
 
     Returns:
         ``(h, planes)`` — ``h`` is the ``(n_local, num_classes)`` output for
@@ -141,8 +144,8 @@ def forward_stale(params, h_own, sg_local, ghosts, refresh, own_rows,
         hw = h_all @ p["w"]
         coef = (jax.lax.rsqrt(jnp.take(outdeg_all, es))
                 * jax.lax.rsqrt(jnp.take(indeg_l, ed)))
-        feat = jnp.take(hw, es, axis=0) * (coef * em)[:, None]
-        h = jax.ops.segment_sum(feat, ed, n_local) + p["b"]
+        h = gather_scale_segment_sum(hw, es, ed, coef * em, n_local,
+                                     use_kernel=use_kernel) + p["b"]
         if i + 1 < n_layers:
             h = jax.nn.relu(h)
     return h, planes

@@ -1,5 +1,11 @@
 """Per-kernel shape/dtype sweeps asserting allclose vs the ref.py oracles
-(interpret=True executes the kernel bodies on CPU)."""
+(interpret=True executes the kernel bodies on CPU), gradient tests for
+the custom VJPs, hypothesis properties over random shapes, and the
+kernel-vs-reference training-equivalence subprocess matrix."""
+import os
+import subprocess
+import sys
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -7,10 +13,12 @@ import pytest
 
 from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention_pallas
-from repro.kernels.segment_sum import segment_sum_pallas
+from repro.kernels.segment_sum import (gather_scale_segment_sum_pallas,
+                                       segment_sum_pallas)
 from repro.kernels.ssd_chunk import ssd_chunk_state_pallas
 
 RNG = np.random.default_rng(42)
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
 def _tol(dtype):
@@ -38,6 +46,209 @@ def test_segment_sum_empty_segments():
     got = segment_sum_pallas(msgs, ids, 5)
     assert float(got[0, 0]) == 8.0
     assert float(jnp.abs(got[1:]).sum()) == 0.0
+
+
+def test_segment_sum_no_edges():
+    """E=0 degenerates to a single all-pad tile: zeros out, zeros grad."""
+    msgs = jnp.zeros((0, 6), jnp.float32)
+    ids = jnp.zeros((0,), jnp.int32)
+    got = segment_sum_pallas(msgs, ids, 7)
+    assert got.shape == (7, 6)
+    assert float(jnp.abs(got).sum()) == 0.0
+    grad = jax.grad(lambda m: jnp.sum(segment_sum_pallas(m, ids, 7)))(msgs)
+    assert grad.shape == (0, 6)
+
+
+# ---------------------------------------------------------------------------
+# custom-VJP gradients: kernel vs jax.ops autodiff
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("E,F,N", [(64, 32, 16), (300, 70, 45),
+                                   (17, 5, 3), (129, 130, 129)])
+def test_segment_sum_grad_matches_reference(E, F, N):
+    """d/d(msgs) of a weighted sum through the kernel == through
+    jax.ops.segment_sum (the backward gather kernel vs XLA's VJP)."""
+    msgs = jnp.asarray(RNG.normal(size=(E, F)), jnp.float32)
+    ids = jnp.asarray(RNG.integers(0, N, E), jnp.int32)
+    w = jnp.asarray(RNG.normal(size=(N, F)), jnp.float32)
+
+    def loss(seg_fn):
+        return lambda m: jnp.sum(seg_fn(m, ids, N) * w)
+
+    gk = jax.grad(loss(lambda m, i, n: segment_sum_pallas(m, i, n)))(msgs)
+    gr = jax.grad(loss(jax.ops.segment_sum))(msgs)
+    np.testing.assert_allclose(np.asarray(gk), np.asarray(gr),
+                               atol=2e-5, rtol=2e-5)
+
+
+def _fused_ref(h, src, dst, coef, num_dst):
+    msgs = jnp.take(h, src, axis=0) * coef[:, None]
+    return jax.ops.segment_sum(msgs, dst, num_dst)
+
+
+@pytest.mark.parametrize("S,E,F,N", [(50, 200, 33, 40), (16, 64, 128, 16),
+                                     (130, 300, 5, 71)])
+def test_fused_forward_matches_reference(S, E, F, N):
+    h = jnp.asarray(RNG.normal(size=(S, F)), jnp.float32)
+    src = jnp.asarray(RNG.integers(0, S, E), jnp.int32)
+    dst = jnp.asarray(RNG.integers(0, N, E), jnp.int32)
+    coef = jnp.asarray(RNG.normal(size=(E,)), jnp.float32)
+    got = gather_scale_segment_sum_pallas(h, src, dst, coef, N)
+    want = _fused_ref(h, src, dst, coef, N)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("S,E,F,N", [(50, 200, 33, 40), (130, 300, 5, 71)])
+def test_fused_grads_match_reference(S, E, F, N):
+    """dh (fused kernel with src/dst swapped) and dcoef (edge-dot
+    kernel) both match the XLA VJP of the unfused expression."""
+    h = jnp.asarray(RNG.normal(size=(S, F)), jnp.float32)
+    src = jnp.asarray(RNG.integers(0, S, E), jnp.int32)
+    dst = jnp.asarray(RNG.integers(0, N, E), jnp.int32)
+    coef = jnp.asarray(RNG.normal(size=(E,)), jnp.float32)
+    w = jnp.asarray(RNG.normal(size=(N, F)), jnp.float32)
+
+    def loss(fn):
+        return lambda h_, c_: jnp.sum(fn(h_, src, dst, c_, N) * w)
+
+    gk = jax.grad(loss(gather_scale_segment_sum_pallas),
+                  argnums=(0, 1))(h, coef)
+    gr = jax.grad(loss(_fused_ref), argnums=(0, 1))(h, coef)
+    np.testing.assert_allclose(np.asarray(gk[0]), np.asarray(gr[0]),
+                               atol=2e-5, rtol=2e-5)
+    np.testing.assert_allclose(np.asarray(gk[1]), np.asarray(gr[1]),
+                               atol=2e-4, rtol=2e-4)
+
+
+def test_fused_all_masked_edges():
+    """coef carries the edge mask: all-masked input aggregates (and
+    back-propagates) exactly zero."""
+    S, E, F, N = 20, 40, 12, 10
+    h = jnp.asarray(RNG.normal(size=(S, F)), jnp.float32)
+    src = jnp.asarray(RNG.integers(0, S, E), jnp.int32)
+    dst = jnp.asarray(RNG.integers(0, N, E), jnp.int32)
+    coef = jnp.zeros((E,), jnp.float32)
+    out = gather_scale_segment_sum_pallas(h, src, dst, coef, N)
+    assert float(jnp.abs(out).sum()) == 0.0
+    dh = jax.grad(lambda h_: jnp.sum(
+        gather_scale_segment_sum_pallas(h_, src, dst, coef, N)))(h)
+    assert float(jnp.abs(dh).sum()) == 0.0
+
+
+def test_fused_capacity_fallback():
+    """Above the fused kernel's VMEM capacity, the ops-layer dispatch
+    falls back to the unfused blocked kernel (row-count independent)
+    instead of tripping the budget assert — use_kernel=True must work
+    on large single-device graphs."""
+    from repro.kernels import ops as kops
+    from repro.kernels.segment_sum import fused_fits
+
+    S = N = 5000
+    E, F = 300, 128
+    assert not fused_fits(S, N, F)
+    h = jnp.asarray(RNG.normal(size=(S, F)), jnp.float32)
+    src = jnp.asarray(RNG.integers(0, S, E), jnp.int32)
+    dst = jnp.asarray(RNG.integers(0, N, E), jnp.int32)
+    coef = jnp.asarray(RNG.normal(size=(E,)), jnp.float32)
+    got = kops.gather_scale_segment_sum(h, src, dst, coef, N)
+    want = _fused_ref(h, src, dst, coef, N)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
+    # gradients flow through the fallback path too
+    gk = jax.grad(lambda h_: jnp.sum(kops.gather_scale_segment_sum(
+        h_, src, dst, coef, N)))(h)
+    gr = jax.grad(lambda h_: jnp.sum(_fused_ref(h_, src, dst, coef, N)))(h)
+    np.testing.assert_allclose(np.asarray(gk), np.asarray(gr),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_fused_no_edges():
+    h = jnp.asarray(RNG.normal(size=(9, 6)), jnp.float32)
+    e = jnp.zeros((0,), jnp.int32)
+    out = gather_scale_segment_sum_pallas(h, e, e,
+                                          jnp.zeros((0,), jnp.float32), 5)
+    assert out.shape == (5, 6)
+    assert float(jnp.abs(out).sum()) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# hypothesis properties over random (E, F, num_segments)
+# ---------------------------------------------------------------------------
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                                     # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=20, deadline=None)
+    @given(E=st.integers(0, 260), F=st.integers(1, 140),
+           N=st.integers(1, 150), seed=st.integers(0, 2**31 - 1))
+    def test_property_segment_sum_fwd_bwd(E, F, N, seed):
+        """Forward and VJP match jax.ops for arbitrary shapes, including
+        E=0 and non-multiples of every tile size."""
+        rng = np.random.default_rng(seed)
+        msgs = jnp.asarray(rng.normal(size=(E, F)), jnp.float32)
+        ids = jnp.asarray(rng.integers(0, N, E), jnp.int32)
+        got = segment_sum_pallas(msgs, ids, N)
+        want = jax.ops.segment_sum(msgs, ids, N)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=3e-5, rtol=3e-5)
+        w = jnp.asarray(rng.normal(size=(N, F)), jnp.float32)
+        gk = jax.grad(lambda m: jnp.sum(
+            segment_sum_pallas(m, ids, N) * w))(msgs)
+        gr = jax.grad(lambda m: jnp.sum(
+            jax.ops.segment_sum(m, ids, N) * w))(msgs)
+        np.testing.assert_allclose(np.asarray(gk), np.asarray(gr),
+                                   atol=3e-5, rtol=3e-5)
+
+    @settings(max_examples=15, deadline=None)
+    @given(S=st.integers(1, 120), E=st.integers(0, 200),
+           F=st.integers(1, 140), N=st.integers(1, 90),
+           mask_all=st.booleans(), seed=st.integers(0, 2**31 - 1))
+    def test_property_fused_fwd_bwd(S, E, F, N, mask_all, seed):
+        """Fused kernel (fwd + dh) matches the unfused XLA expression,
+        including all-masked edge sets (coef == 0 everywhere)."""
+        rng = np.random.default_rng(seed)
+        h = jnp.asarray(rng.normal(size=(S, F)), jnp.float32)
+        src = jnp.asarray(rng.integers(0, S, E), jnp.int32)
+        dst = jnp.asarray(rng.integers(0, N, E), jnp.int32)
+        coef = jnp.zeros((E,), jnp.float32) if mask_all else \
+            jnp.asarray(rng.normal(size=(E,)), jnp.float32)
+        got = gather_scale_segment_sum_pallas(h, src, dst, coef, N)
+        want = _fused_ref(h, src, dst, coef, N)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=3e-5, rtol=3e-5)
+        w = jnp.asarray(rng.normal(size=(N, F)), jnp.float32)
+        gk = jax.grad(lambda h_: jnp.sum(gather_scale_segment_sum_pallas(
+            h_, src, dst, coef, N) * w))(h)
+        gr = jax.grad(lambda h_: jnp.sum(
+            _fused_ref(h_, src, dst, coef, N) * w))(h)
+        np.testing.assert_allclose(np.asarray(gk), np.asarray(gr),
+                                   atol=3e-5, rtol=3e-5)
+
+
+# ---------------------------------------------------------------------------
+# training equivalence: jax.grad through use_kernel=True over a device
+# matrix (subprocess so the forced host-device topology can be set)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.distributed
+@pytest.mark.parametrize("n_dev", [1, 2, 4])
+def test_kernel_training_equivalence(n_dev):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run(
+        [sys.executable,
+         os.path.join(ROOT, "tests", "kernel_train_check.py"),
+         str(n_dev), "hash"],
+        capture_output=True, text=True, timeout=600, env=env)
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "PASS kernel-equivalence" in r.stdout, r.stdout
 
 
 @pytest.mark.parametrize("B,H,K,Sq,Skv,hd", [
