@@ -3,10 +3,11 @@
 ``repro.distributed`` and ``repro.core.propagation``: synchronous
 full-graph (pull mode, selectable partitioner), epoch-level stale
 snapshots (DistGNN), staleness-bounded asynchronous full-graph
-(``--fullgraph``: versioned ghost buffers + refresh budget), and
-partition-parallel mini-batch (halo-cached remote fetches, shard_map
-psum step).  Each run is a subprocess so the forced host-device count
-can be set before jax initializes.
+(``--fullgraph``: versioned ghost buffers + refresh budget — once raw
+fp32, once with the int8 wire codec compressing every ghost refresh
+~4x), and partition-parallel mini-batch (halo-cached remote fetches,
+shard_map psum step).  Each run is a subprocess so the forced
+host-device count can be set before jax initializes.
 
   PYTHONPATH=src python examples/distributed_gnn.py
 
@@ -27,6 +28,9 @@ runs = [
      "--staleness", "4", "--epochs", "15"],
     ["--fullgraph", "--devices", "4", "--partitioner", "ldg",
      "--staleness", "2", "--refresh-frac", "0.05", "--epochs", "15"],
+    ["--fullgraph", "--devices", "4", "--partitioner", "ldg",
+     "--staleness", "2", "--refresh-frac", "0.05", "--epochs", "15",
+     "--wire-codec", "int8"],
     ["--minibatch", "--devices", "4", "--partitioner", "ldg",
      "--cache", "degree", "--arch", "sage", "--epochs", "2"],
 ]

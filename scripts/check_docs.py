@@ -8,9 +8,9 @@ Stdlib-only so it can run anywhere the repo checks out:
   ``#anchor`` links are skipped; ``path#fragment`` checks the path part);
 * **docstrings** — every name in ``repro.distributed.__all__`` and
   ``repro.serving.__all__``, plus every public top-level class/function
-  defined in ``repro.core.{halo,caching,propagation}``, must carry a
-  non-trivial docstring (public dataclasses whose semantics live in the
-  module docstring still need at least a summary line).
+  defined in ``repro.core.{halo,caching,comm,propagation}``, must carry
+  a non-trivial docstring (public dataclasses whose semantics live in
+  the module docstring still need at least a summary line).
 
 Run directly or via ``scripts/run_tests.sh docs``.
 """
@@ -29,7 +29,7 @@ SKIP_DIRS = {".git", "__pycache__", ".pytest_cache", "node_modules"}
 
 EXPORT_MODULES = ["repro.distributed", "repro.serving"]
 CORE_MODULES = ["repro.core.halo", "repro.core.caching",
-                "repro.core.propagation"]
+                "repro.core.comm", "repro.core.propagation"]
 
 
 def markdown_files() -> list:

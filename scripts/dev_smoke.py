@@ -23,6 +23,8 @@ EXTRA_STAGES = {
     "dist_gnn": "2-device mini-batch gradient-equivalence subprocess",
     "kernels": "2-device Pallas-kernel grad-equivalence subprocess "
                "(interpret mode)",
+    "comm": "2-device int8 wire-codec full-graph subprocess (finite "
+            "losses, compressed bytes/step)",
     "docs": "markdown links + public-API docstrings (scripts/check_docs.py)",
 }
 
@@ -39,6 +41,7 @@ ONLY = sys.argv[1:] if len(sys.argv) > 1 else None
 RUN_SERVING = ONLY is None or "serve_gnn" in ONLY
 RUN_DIST = ONLY is None or "dist_gnn" in ONLY
 RUN_KERNELS = ONLY is None or "kernels" in ONLY
+RUN_COMM = ONLY is None or "comm" in ONLY
 RUN_DOCS = ONLY is None or "docs" in ONLY
 ARCHES = [a for a in (ONLY or ARCH_IDS) if a not in EXTRA_STAGES]
 
@@ -166,6 +169,13 @@ if RUN_KERNELS:
     # kernel bodies + custom VJPs every run
     run_subprocess_check("kernels", "kernel_train_check.py",
                          ["2", "hash"], "PASS kernel-equivalence")
+
+if RUN_COMM:
+    # communication plane: an int8-wire full-graph run on 2 forced
+    # devices must train without NaNs (error-feedback residuals intact)
+    # and report codec-compressed bytes/step
+    run_subprocess_check("comm", "comm_train_check.py",
+                         ["2", "int8"], "PASS comm-train")
 
 if RUN_DOCS:
     # docs tier: intra-repo markdown links resolve and every exported

@@ -7,6 +7,9 @@
 #   scripts/run_tests.sh kernels    # Pallas-kernel grad-equivalence checks
 #                                   # in interpret mode (CPU-only CI runs
 #                                   # the kernel bodies + custom VJPs)
+#   scripts/run_tests.sh comm       # communication-plane tier: codec units
+#                                   # + 2-device int8 full-graph subprocess
+#                                   # (finite losses, compressed bytes)
 #   scripts/run_tests.sh docs       # intra-repo markdown links + public-API
 #                                   # docstrings (scripts/check_docs.py)
 #   scripts/run_tests.sh all        # everything
@@ -22,8 +25,11 @@ case "$tier" in
   kernels)
     python tests/kernel_train_check.py 1 hash "$@"
     exec python tests/kernel_train_check.py 2 hash "$@" ;;
+  comm)
+    python -m pytest -q -m "not distributed" tests/test_comm.py "$@"
+    exec python tests/comm_train_check.py 2 int8 ;;
   docs)  exec python scripts/check_docs.py "$@" ;;
   all)   exec python -m pytest -q "$@" ;;
-  *) echo "usage: $0 [tier1|tier2|kernels|docs|all] [pytest args...]" >&2
+  *) echo "usage: $0 [tier1|tier2|kernels|comm|docs|all] [pytest args...]" >&2
      exit 2 ;;
 esac

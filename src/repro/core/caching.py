@@ -14,7 +14,11 @@ feature traffic by caching features of vertices likely to be touched:
 ``FeatureStore`` plays the role of DistDGL's KVStore: a global store that
 serves features and counts the bytes that would cross the interconnect —
 the quantity the caching claims in EXPERIMENTS.md §Paper-validation are
-measured on.
+measured on.  Remote rows travel through one
+:class:`repro.core.comm.Transport` (the unified communication plane), so
+the wire format — and therefore both the returned values and the byte
+accounting — follows the selected :class:`~repro.core.comm.WireCodec`
+(``fp32`` identity by default; ``bf16``/``int8`` compress).
 
 :class:`VersionClock` / :class:`VersionedBuffer` are the *one* staleness
 implementation in the repo: the serving
@@ -27,16 +31,15 @@ exactly the same thing on both paths.
 """
 from __future__ import annotations
 
-from typing import Iterable, Optional
+from typing import Iterable, Optional, Union
 
 import numpy as np
 
+# HEADER_BYTES is canonically defined by the communication plane
+# (re-exported here for the subsystems that historically imported it
+# from caching)
+from repro.core.comm import HEADER_BYTES, Transport, WireCodec
 from repro.graph.structure import Graph
-
-# per-RPC envelope cost of one remote pull (DistDGL KVStore-style request
-# header: keys, shard route, lengths) — charged once per fetch call that
-# actually moves rows, never for calls fully served locally/from cache
-HEADER_BYTES = 64
 
 # sentinel version for "never written"; large-negative (not int64 min) so
 # computing ``clock - NEVER`` cannot overflow int64
@@ -120,32 +123,58 @@ class FeatureStore:
         cache_ids: node ids admitted to the device-side cache (hits are
             free; misses are charged ``bytes_per_row`` each plus one
             ``HEADER_BYTES`` envelope per fetch call that moves rows).
+        codec: wire codec for remote rows (``fp32`` default is bit-exact
+            and keeps the historical raw-float accounting; ``bf16`` /
+            ``int8`` shrink ``bytes_per_row`` and return the receiver's
+            decoded view of every miss row).
 
     Shape convention: :meth:`fetch_masked` is slot-aligned over padded id
     vectors (``-1`` = pad slot) and returns zero rows at unneeded slots,
     so batch shapes stay static and pad rows can never aggregate.
     """
 
-    def __init__(self, g: Graph, cache_ids: np.ndarray):
+    def __init__(self, g: Graph, cache_ids: np.ndarray, *,
+                 codec: Union[str, WireCodec] = "fp32"):
         self.g = g
         self.cached = np.zeros(g.num_nodes, bool)
         self.cached[cache_ids] = True
-        self.bytes_per_row = (g.features.shape[1] * 4
-                              if g.features is not None else 4)
+        self.transport = Transport(codec, n_rows=g.num_nodes)
+        self.codec = self.transport.codec
+        self.bytes_per_row = (
+            self.codec.wire_bytes_per_row(g.features.shape[1])
+            if g.features is not None else 4)
         self.hits = 0
         self.misses = 0
-        self.requests = 0            # remote pull RPCs actually issued
+
+    @property
+    def requests(self) -> int:
+        """Remote pull RPCs actually issued (one envelope each)."""
+        return self.transport.requests
+
+    def _pull_remote(self, rows: np.ndarray,
+                     ids: np.ndarray) -> np.ndarray:
+        """Ship miss rows through the communication plane: accounts one
+        RPC (payload + header) and returns the wire-decoded rows."""
+        return self.transport.send(rows, row_ids=ids)
 
     def fetch(self, ids: np.ndarray) -> np.ndarray:
+        """Fetch feature rows for ``ids`` (pads dropped); cache misses
+        cross the wire (codec-encoded + accounted), hits are local."""
         ids = np.asarray(ids)
         ids = ids[ids >= 0]
         hit = self.cached[ids]
         self.hits += int(hit.sum())
-        miss_rows = int((~hit).sum())
+        miss = ~hit
+        miss_rows = int(miss.sum())
         self.misses += miss_rows
+        if self.g.features is None:
+            if miss_rows:
+                self.transport.account_opaque(miss_rows, 4)
+            return ids
+        out = self.g.features[ids]          # fancy indexing: fresh copy
         if miss_rows:
-            self.requests += 1
-        return self.g.features[ids] if self.g.features is not None else ids
+            out[miss] = self._pull_remote(out[miss], ids[miss])
+        return out
 
     def _local_rows_mask(self, safe_ids: np.ndarray,
                          needed: np.ndarray) -> np.ndarray:
@@ -167,15 +196,18 @@ class FeatureStore:
         remote = needed & ~self._local_rows_mask(safe, needed)
         hit = self.cached[safe] & remote
         self.hits += int(hit.sum())
-        miss_rows = int((remote & ~hit).sum())
+        miss = remote & ~hit
+        miss_rows = int(miss.sum())
         self.misses += miss_rows
-        if miss_rows:
-            self.requests += 1
         if self.g.features is None:
+            if miss_rows:
+                self.transport.account_opaque(miss_rows, 4)
             return safe
         out = np.zeros((len(ids), self.g.features.shape[1]),
                        self.g.features.dtype)
         out[needed] = self.g.features[safe[needed]]
+        if miss_rows:
+            out[miss] = self._pull_remote(out[miss], safe[miss])
         return out
 
     @property
@@ -185,7 +217,9 @@ class FeatureStore:
 
     @property
     def transferred_bytes(self) -> int:
-        return self.misses * self.bytes_per_row + self.requests * HEADER_BYTES
+        """Bytes the communication plane moved: miss-row payloads at the
+        codec's wire size plus one ``HEADER_BYTES`` envelope per RPC."""
+        return self.transport.total_bytes
 
 
 def no_cache(g: Graph, capacity: int) -> np.ndarray:

@@ -24,7 +24,9 @@ full-graph training.  Each layer's ghost activations live in a
 :class:`~repro.core.caching.VersionClock`; a refresh *plan* per step picks
 which ghost rows are exchanged synchronously (every row whose staleness
 would exceed the bound, plus a budgeted fraction of the oldest rest) and
-charges exactly those rows as cross-partition traffic.
+charges exactly those rows as cross-partition traffic — priced at the
+wire size of the exchange's :class:`~repro.core.comm.WireCodec`, the
+unified communication plane every transfer path shares.
 """
 from __future__ import annotations
 
@@ -33,7 +35,8 @@ from typing import List, Optional, Sequence
 
 import numpy as np
 
-from repro.core.caching import (HEADER_BYTES, VersionClock, VersionedBuffer)
+from repro.core.caching import VersionClock, VersionedBuffer
+from repro.core.comm import HEADER_BYTES, WireCodec, resolve_codec
 from repro.core.partitioning import EdgeCutPartition
 from repro.graph.structure import Graph
 
@@ -143,7 +146,9 @@ class RefreshPlan:
                every other ghost row is served stale from its buffer.
         rows_moved:   Σ over layers of refreshed ghost *copies* (a row
                ghosted by k partitions is sent k times).
-        payload_bytes: rows_moved × row width × element size.
+        payload_bytes: rows_moved × the active codec's per-row wire size
+               (``WireCodec.wire_bytes_per_row``, so compression shows up
+               directly in every plan's estimate).
         header_bytes:  one per-RPC header per (partition, layer) that pulls
                at least one refreshed row this step.
     """
@@ -197,7 +202,12 @@ class HaloExchange:
             id space; ``n_rows`` then gives the padded row count.
         n_rows: buffer row count (default: number of vertices in
             ``layout``).
-        bytes_per_el: element size for traffic accounting (float32 = 4).
+        codec: wire codec name or :class:`~repro.core.comm.WireCodec`
+            for refresh payloads.  Plans charge each refreshed ghost copy
+            at ``codec.wire_bytes_per_row(dim)`` (fp32 → the historical
+            ``4 × dim``), and the buffers are expected to hold the
+            codec-*decoded* values (the jitted step applies
+            ``codec.jax_qdq`` before :meth:`write_planes` stores them).
         clock: share an existing :class:`VersionClock` (e.g. with a
             serving cache); default: a private clock starting at 0.
     """
@@ -205,7 +215,8 @@ class HaloExchange:
     def __init__(self, layout: HaloLayout, layer_dims: Sequence[int], *,
                  max_staleness: int = 0, refresh_frac: float = 0.0,
                  relabel: Optional[np.ndarray] = None,
-                 n_rows: Optional[int] = None, bytes_per_el: int = 4,
+                 n_rows: Optional[int] = None,
+                 codec: "str | WireCodec" = "fp32",
                  clock: Optional[VersionClock] = None):
         if max_staleness < 0:
             raise ValueError("max_staleness must be >= 0")
@@ -214,8 +225,12 @@ class HaloExchange:
         self.layout = layout
         self.max_staleness = max_staleness
         self.refresh_frac = refresh_frac
-        self.bytes_per_el = bytes_per_el
+        self.codec = resolve_codec(codec)
         self.layer_dims = list(layer_dims)
+        # per-layer wire size of one refreshed ghost row (codec-aware —
+        # what RefreshPlan estimates and the bytes/step benches report)
+        self.row_wire_bytes = [self.codec.wire_bytes_per_row(d)
+                               for d in self.layer_dims]
         n = n_rows if n_rows is not None else len(layout.owner)
         if relabel is None:
             relabel = np.arange(len(layout.owner), dtype=np.int64)
@@ -253,7 +268,7 @@ class HaloExchange:
         now = self.clock.now
         budget = int(self.refresh_frac * self.n_ghost)
         masks, rows_moved, payload, headers = [], 0, 0, 0
-        for buf, dim in zip(self.buffers, self.layer_dims):
+        for buf, row_bytes in zip(self.buffers, self.row_wire_bytes):
             age = buf.age()
             must = self.ghost_rows & (age > self.max_staleness)
             mask = must.copy()
@@ -267,7 +282,7 @@ class HaloExchange:
             buf.version[mask] = now          # values arrive in write_planes
             masks.append(mask)
             rows_moved += int(self.copies[mask].sum())
-            payload += int(self.copies[mask].sum()) * dim * self.bytes_per_el
+            payload += int(self.copies[mask].sum()) * row_bytes
             headers += HEADER_BYTES * int(
                 (self.member[:, mask].any(axis=1)).sum())
         self.clock.tick()
@@ -280,7 +295,14 @@ class HaloExchange:
                      planes: Sequence[np.ndarray]) -> None:
         """Store the step's freshly computed global layer outputs into the
         buffers, but only at the rows ``plan`` refreshed (everything else
-        keeps its historical value and version)."""
+        keeps its historical value and version).
+
+        ``planes`` must already carry the *wire* values: under a lossy
+        codec the jitted step returns codec-decoded planes (it applies
+        ``codec.jax_qdq`` + error feedback in
+        :func:`repro.models.gnn.model.forward_stale`), so the buffers —
+        and every subsequent stale read — see exactly what crossed the
+        interconnect."""
         for buf, mask, plane in zip(self.buffers, plan.masks, planes):
             buf.values[mask] = np.asarray(plane)[mask]
 
@@ -292,11 +314,10 @@ class HaloExchange:
 
     def sync_bytes_per_step(self) -> int:
         """Traffic a fully synchronous exchange (S=0, every ghost copy,
-        every layer, every step) would move — the baseline the staleness
-        savings are measured against."""
+        every layer, every step) would move *under the active codec* —
+        the baseline the staleness savings are measured against."""
         per_layer_rows = int(self.copies.sum())
-        payload = sum(per_layer_rows * d * self.bytes_per_el
-                      for d in self.layer_dims)
+        payload = sum(per_layer_rows * rb for rb in self.row_wire_bytes)
         headers = HEADER_BYTES * len(self.layer_dims) * int(
             (self.member.any(axis=1)).sum())
         return payload + headers
@@ -308,6 +329,7 @@ class HaloExchange:
         return {
             "staleness": self.max_staleness,
             "refresh_frac": self.refresh_frac,
+            "wire_codec": self.codec.name,
             "ghost_rows": self.n_ghost,
             "steps_planned": self.steps_planned,
             "refreshed_rows_total": self.total_rows,

@@ -34,6 +34,14 @@ the synchronous pull step of
 equivalence ``tests/async_train_check.py`` proves to ≤ 1e-5 per
 parameter.  Larger ``S`` strictly reduces cross-partition bytes/step
 (each row crosses the wire at most every ``S+1`` steps).
+
+Orthogonally, ``cfg.wire_codec`` compresses what DOES cross the wire
+through the unified communication plane (:mod:`repro.core.comm`): ghost
+refreshes are quantized in-step (``bf16`` truncation or ``int8`` per-row
+affine + error-feedback residuals), the historical buffers store the
+decoded wire values, and every plan prices rows at the codec's wire
+size — int8 cuts bytes/step ~4x at an accuracy gap ≤ 0.02
+(``benchmarks/bench_async.py`` asserts both).
 """
 from __future__ import annotations
 
@@ -46,6 +54,7 @@ import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.core.comm import resolve_codec
 from repro.core.halo import HaloExchange, build_halo
 from repro.core.partitioning import EdgeCutPartition
 from repro.core.propagation import AXIS, ShardedGraph, shard_graph
@@ -58,7 +67,7 @@ from repro.models.gnn.model import GNNConfig
 def exchange_for_shards(g: Graph, sg: ShardedGraph,
                         layer_dims: Sequence[int], *,
                         max_staleness: int = 0, refresh_frac: float = 0.0,
-                        clock=None) -> HaloExchange:
+                        codec="fp32", clock=None) -> HaloExchange:
     """Build the :class:`HaloExchange` matching a ``ShardedGraph``.
 
     ``shard_graph`` relabels vertices to contiguous per-device ranges, so
@@ -71,8 +80,9 @@ def exchange_for_shards(g: Graph, sg: ShardedGraph,
         sg: the sharded layout built from it.
         layer_dims: widths of the buffered layer outputs (``[hidden] *
             (num_layers - 1)`` for the GCN stack).
-        max_staleness / refresh_frac / clock: forwarded to
-            :class:`HaloExchange`.
+        max_staleness / refresh_frac / codec / clock: forwarded to
+            :class:`HaloExchange` (``codec`` selects the wire format of
+            the ghost refresh payloads).
     """
     part = EdgeCutPartition(
         assignment=(sg.perm // sg.n_local).astype(np.int64),
@@ -80,32 +90,39 @@ def exchange_for_shards(g: Graph, sg: ShardedGraph,
     layout = build_halo(g, part)
     return HaloExchange(layout, layer_dims, max_staleness=max_staleness,
                         refresh_frac=refresh_frac, relabel=sg.perm,
-                        n_rows=sg.n_local * sg.n_dev, clock=clock)
+                        n_rows=sg.n_local * sg.n_dev, codec=codec,
+                        clock=clock)
 
 
 def make_async_fullgraph_step(optimizer, n_dev: int, *,
-                              use_kernel: bool = False):
+                              use_kernel: bool = False, codec="fp32"):
     """Build the jitted staleness-bounded full-graph GCN step.
 
     Returns ``(mesh, train_step)`` where::
 
-        train_step(params, opt_state, sg, ghosts, refresh)
-            -> (params, opt_state, loss, planes)
+        train_step(params, opt_state, sg, ghosts, refresh, residuals)
+            -> (params, opt_state, loss, planes, residuals)
 
     ``sg`` is a :class:`~repro.core.propagation.ShardedGraph`; ``ghosts``
     are the per-layer ``(N_pad, F_l)`` stale activation planes
     (replicated); ``refresh`` the per-layer ``(N_pad,)`` bool refresh
-    masks; ``planes`` the freshly all-gathered layer outputs to write
-    back.  Params/opt_state replicated, graph arrays sharded over mesh
-    axis ``"g"``, gradients psum'd — identical conventions to
-    :func:`repro.core.propagation.make_distributed_gcn_step`.
+    masks; ``planes`` the layer outputs *as they crossed the wire*
+    (codec-decoded; exact fp32 under the identity codec) to write back;
+    ``residuals`` the per-layer error-feedback state (pass ``()`` and
+    ignore the returned value under the identity codec, which compiles
+    the exact pre-codec step).  Params/opt_state replicated, graph arrays
+    sharded over mesh axis ``"g"``, gradients psum'd — identical
+    conventions to :func:`repro.core.propagation.make_distributed_gcn_step`.
     ``use_kernel`` runs every layer's aggregation through the fused
-    Pallas gather-scale-segment-sum kernel.
+    Pallas gather-scale-segment-sum kernel; ``codec`` selects the
+    communication-plane wire format (see :mod:`repro.core.comm`).
     """
     mesh = Mesh(np.array(jax.devices()[:n_dev]), (AXIS,))
+    codec = resolve_codec(codec)
+    quantize = not codec.identity
 
     def step(params, opt_state, x, es, ed, em, indeg, outdeg, labels,
-             lmask, ghosts, refresh):
+             lmask, ghosts, refresh, residuals):
         n_local = x.shape[0]
         n_pad = outdeg.shape[0]
         idx = jax.lax.axis_index(AXIS)
@@ -116,35 +133,39 @@ def make_async_fullgraph_step(optimizer, n_dev: int, *,
         cnt = jnp.maximum(jax.lax.psum(jnp.sum(lmask), AXIS), 1.0)
 
         def loss_fn(p):
-            h, planes = GM.forward_stale(
+            h, planes, res_out = GM.forward_stale(
                 p, x, (es, ed, em, indeg, outdeg, n_local), ghosts,
-                refresh, own_rows, axis=AXIS, use_kernel=use_kernel)
+                refresh, own_rows, axis=AXIS, use_kernel=use_kernel,
+                codec=codec if quantize else None,
+                residuals=residuals if quantize else None)
             logz = jax.nn.logsumexp(h, axis=-1)
             gold = jnp.take_along_axis(h, labels[:, None], axis=-1)[:, 0]
-            return jnp.sum((logz - gold) * lmask) / cnt, planes
+            return (jnp.sum((logz - gold) * lmask) / cnt,
+                    (planes, res_out))
 
-        (local_loss, planes), grads = jax.value_and_grad(
+        (local_loss, (planes, res_out)), grads = jax.value_and_grad(
             loss_fn, has_aux=True)(params)
         loss = jax.lax.psum(local_loss, AXIS)
         grads = jax.tree.map(lambda g_: jax.lax.psum(g_, AXIS), grads)
         params, opt_state = optimizer.apply(params, grads, opt_state)
-        return params, opt_state, loss, planes
+        return params, opt_state, loss, planes, res_out
 
     rep, shard = P(), P(AXIS)
     smapped = shard_map(
         step, mesh=mesh,
         in_specs=(rep, rep, shard, shard, shard, shard, shard, rep,
-                  shard, shard, rep, rep),
-        out_specs=(rep, rep, rep, rep), check_rep=False)
+                  shard, shard, rep, rep, rep),
+        out_specs=(rep, rep, rep, rep, rep), check_rep=False)
     jitted = jax.jit(smapped)
 
     def train_step(params, opt_state, sg: ShardedGraph,
                    ghosts: Sequence[jax.Array],
-                   refresh: Sequence[jax.Array]):
+                   refresh: Sequence[jax.Array],
+                   residuals: Sequence[jax.Array] = ()):
         return jitted(params, opt_state, sg.x, sg.edge_src_g,
                       sg.edge_dst_l, sg.edge_mask, sg.in_deg, sg.out_deg,
                       sg.labels, sg.label_mask, tuple(ghosts),
-                      tuple(refresh))
+                      tuple(refresh), tuple(residuals))
 
     return mesh, train_step
 
@@ -168,6 +189,11 @@ class AsyncFullGraphTrainer:
         staleness: bound ``S`` — a ghost activation may be up to ``S``
             steps old; ``0`` = synchronous halo exchange.
         refresh_frac: extra per-step refresh budget (fraction of ghosts).
+
+    ``cfg.wire_codec`` selects the communication-plane wire format of the
+    ghost refresh payloads (``fp32`` is bit-exact with the pre-codec
+    trainer; ``bf16``/``int8`` compress, with int8 carrying sender-side
+    error-feedback residuals through the step).
     """
 
     def __init__(self, g: Graph, cfg: GNNConfig, optimizer, n_dev: int, *,
@@ -179,13 +205,20 @@ class AsyncFullGraphTrainer:
         self.g = g
         self.cfg = cfg
         self.n_dev = n_dev
+        self.codec = resolve_codec(cfg.wire_codec)
         self.sg = shard_graph(g, n_dev, method=partitioner)
         layer_dims = [cfg.hidden] * (cfg.num_layers - 1)
         self.exchange = exchange_for_shards(
             g, self.sg, layer_dims, max_staleness=staleness,
-            refresh_frac=refresh_frac)
+            refresh_frac=refresh_frac, codec=self.codec)
         self.mesh, self.step = make_async_fullgraph_step(
-            optimizer, n_dev, use_kernel=cfg.use_kernel)
+            optimizer, n_dev, use_kernel=cfg.use_kernel, codec=self.codec)
+        # sender-side error-feedback state (error-feedback codecs only):
+        # lives next to the ghost buffers so it persists across run()
+        # calls — quantization error keeps feeding back epoch over epoch
+        self._residuals = (tuple(
+            jnp.zeros((self.sg.n_local * n_dev, d), jnp.float32)
+            for d in layer_dims) if self.codec.error_feedback else ())
         self.steps_run = 0
         self.consumed_bytes = 0
         self.consumed_rows = 0
@@ -221,8 +254,13 @@ class AsyncFullGraphTrainer:
                 plan = next(planner) if planner else next_plan()
                 t0 = time.perf_counter()
                 masks = [jnp.asarray(m) for m in plan.masks]
-                params, opt_state, loss, planes = self.step(
-                    params, opt_state, self.sg, ghosts, masks)
+                # residuals are instance state (carried through the step
+                # so the wire planes it returns are exactly what
+                # receivers decode, and preserved across run() calls)
+                (params, opt_state, loss, planes,
+                 self._residuals) = self.step(
+                    params, opt_state, self.sg, ghosts, masks,
+                    self._residuals)
                 ghosts = [jnp.where(m[:, None], pl, gh) for m, pl, gh
                           in zip(masks, planes, ghosts)]
                 self.exchange.write_planes(
@@ -260,6 +298,7 @@ class AsyncFullGraphTrainer:
         return {
             "staleness": self.exchange.max_staleness,
             "refresh_frac": self.exchange.refresh_frac,
+            "wire_codec": self.codec.name,
             "steps": self.steps_run,
             "ghost_rows": self.exchange.n_ghost,
             "bytes_per_step": per_step,

@@ -30,6 +30,7 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core.abstraction import DeviceGraph
+from repro.core.comm import resolve_codec
 from repro.core.propagation import AXIS
 from repro.core.scheduling import PipelinedLoader
 from repro.distributed.sampler import PartitionBatch
@@ -131,8 +132,17 @@ def make_distributed_minibatch_step(cfg: GNNConfig, optimizer, n_dev: int,
     the differentiable Pallas kernels (``forward_blocks`` forwards the
     flag into each layer, including GAT's softmax denominator) — wire it
     from ``train_gnn --use-kernel``.
+
+    ``cfg.wire_codec`` names the communication-plane codec the feature
+    path used: the ``arrays["x"]`` rows from :func:`collate` already
+    carry the codec-*decoded* values (remote misses crossed the wire in
+    :class:`~repro.distributed.sampler.PartitionFeatureStore`, which the
+    launcher must configure with the same codec), so the step itself
+    consumes them as-is — the name is resolved here only to fail fast on
+    a typo before the first batch is sampled.
     """
     mesh = Mesh(np.array(jax.devices()[:n_dev]), (AXIS,))
+    resolve_codec(cfg.wire_codec)    # fail fast on unknown codec names
     caps = list(caps)
 
     def step(params, opt_state, es, ed, em, sdeg, x, y, w):

@@ -38,11 +38,12 @@ class PartitionFeatureStore(FeatureStore):
     """A :class:`FeatureStore` as seen from one partition: owned rows are
     local reads (no traffic), remote rows go through the halo cache, and
     only cache-missing remote rows cross the interconnect — the quantity
-    ``transferred_bytes`` counts (rows + per-RPC header)."""
+    ``transferred_bytes`` counts (rows at the wire codec's per-row size +
+    per-RPC header, via the shared :class:`repro.core.comm.Transport`)."""
 
     def __init__(self, g: Graph, owned_ids: np.ndarray,
-                 cache_ids: np.ndarray):
-        super().__init__(g, cache_ids)
+                 cache_ids: np.ndarray, *, codec="fp32"):
+        super().__init__(g, cache_ids, codec=codec)
         self.owned = np.zeros(g.num_nodes, bool)
         self.owned[owned_ids] = True
         self.local_rows = 0
@@ -74,7 +75,7 @@ class DistributedMinibatchSampler:
     def __init__(self, g: Graph, n_parts: int, fanouts: Sequence[int],
                  batch_cap: int, *, partitioner: str = "hash",
                  cache_policy: str = "degree", cache_capacity: int = 0,
-                 seed: int = 0,
+                 wire_codec: str = "fp32", seed: int = 0,
                  part: Optional[EdgeCutPartition] = None):
         self.g = g
         if part is None:
@@ -102,7 +103,8 @@ class DistributedMinibatchSampler:
         self.stores = [
             PartitionFeatureStore(
                 g, self.layout.owned[p],
-                self._halo_cache_ids(p, order, cache_capacity))
+                self._halo_cache_ids(p, order, cache_capacity),
+                codec=wire_codec)
             for p in range(self.n_parts)]
 
     def _halo_cache_ids(self, p: int, order: np.ndarray,
@@ -160,6 +162,7 @@ class DistributedMinibatchSampler:
             "local_rows": sum(s.local_rows for s in self.stores),
             "remote_requests": sum(s.requests for s in self.stores),
             "ghost_fraction": self.layout.ghost_fraction(),
+            "wire_codec": self.stores[0].codec.name,
         }
 
 

@@ -41,6 +41,11 @@ def parse_args(argv=None):
                     help="fraction of nodes admitted to the caches")
     ap.add_argument("--staleness", type=int, default=0,
                     help="max staleness (version-clock ticks) served")
+    ap.add_argument("--wire-codec", default="fp32",
+                    choices=["fp32", "bf16", "int8"],
+                    help="communication-plane wire codec "
+                         "(repro.core.comm) for remote feature pulls "
+                         "and cache-fill payloads; fp32 is bit-exact")
     ap.add_argument("--use-kernel", action="store_true",
                     help="Pallas segment-sum for the Gather step")
     ap.add_argument("--train-epochs", type=int, default=0,
@@ -76,7 +81,8 @@ def main(argv=None):
     cfg = GNNConfig(arch=args.arch, feat_dim=feat_dim, hidden=args.hidden,
                     num_classes=g.num_classes,
                     num_layers=len(args.fanouts),
-                    use_kernel=args.use_kernel)
+                    use_kernel=args.use_kernel,
+                    wire_codec=args.wire_codec)
     params = GM.init_gnn(cfg, jax.random.PRNGKey(args.seed))
 
     if args.train_epochs:
@@ -126,6 +132,10 @@ def main(argv=None):
           f"feature hit rate {res['feature_hit_ratio']:.2%}  "
           f"pad overhead {res['pad_overhead']:.2%}  "
           f"jit entries {res['jit_entries']}")
+    print(f"wire codec {res['wire_codec']}: feature "
+          f"{res['feature_bytes'] / 2**20:.2f} MiB + cache-fill "
+          f"{res['fill_bytes'] / 2**20:.2f} MiB = "
+          f"{res['wire_bytes'] / 2**20:.2f} MiB on the wire")
     print(f"bytes saved vs no-cache: {saved / 2**20:.2f} MiB "
           f"({saved / max(base['feature_bytes'], 1):.1%})")
     return res

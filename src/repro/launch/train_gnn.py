@@ -10,6 +10,13 @@ single-device, or partition-parallel when ``--minibatch --devices N``
 shard_map psum step).  ``--use-kernel`` routes every path's Gather step
 through the differentiable fused Pallas aggregation kernels
 (``repro.kernels``; interpret mode off-TPU, same numbers to <= 1e-5).
+``--wire-codec {fp32,bf16,int8}`` selects the communication-plane wire
+format (``repro.core.comm``) on the paths wired onto it — ghost
+refreshes under ``--fullgraph``, remote feature rows under
+``--minibatch``; ``fp32`` is bit-exact, ``int8`` cuts bytes/step ~4x
+with sender-side error feedback.  The synchronous distributed
+full-graph modes (``--mode pull/push/stale/hysync``) still move raw
+fp32 and reject other codecs rather than misreport their traffic.
 
   PYTHONPATH=src python -m repro.launch.train_gnn --devices 8 \
       --partitioner ldg --mode pull --epochs 30 --use-kernel
@@ -72,6 +79,14 @@ def parse_args(argv=None):
                     help="run every aggregation (the Gather hot spot) "
                          "through the differentiable fused Pallas "
                          "kernels (interpret mode off-TPU)")
+    ap.add_argument("--wire-codec", default="fp32",
+                    choices=["fp32", "bf16", "int8"],
+                    help="communication-plane wire codec "
+                         "(repro.core.comm) for every remote payload: "
+                         "ghost refreshes (--fullgraph) and remote "
+                         "feature fetches (--minibatch).  fp32 is "
+                         "bit-exact; int8 cuts bytes ~4x with "
+                         "error-feedback residuals")
     ap.add_argument("--seed", type=int, default=0)
     return ap.parse_args(argv)
 
@@ -90,6 +105,14 @@ def resolve_edge_cut(g, n_dev: int, method: str) -> str:
 
 def main(argv=None):
     args = parse_args(argv)
+    if args.wire_codec != "fp32" and not (args.minibatch or args.fullgraph):
+        # the synchronous full-graph modes (pull/push/stale/hysync) and
+        # the single-device full-batch trainer are not on the
+        # communication plane; silently ignoring the flag would make
+        # their reported traffic a lie
+        raise SystemExit("--wire-codec is wired through --fullgraph and "
+                         "--minibatch; the synchronous full-graph modes "
+                         "move raw fp32")
     if args.devices > 1 and "--xla_force_host_platform_device_count" not in \
             os.environ.get("XLA_FLAGS", ""):
         os.environ["XLA_FLAGS"] = (
@@ -127,7 +150,8 @@ def main(argv=None):
 
     cfg = GNNConfig(arch=args.arch, feat_dim=feat_dim,
                     hidden=args.hidden, num_classes=g.num_classes,
-                    use_kernel=args.use_kernel)
+                    use_kernel=args.use_kernel,
+                    wire_codec=args.wire_codec)
     params = GM.init_gnn(cfg, jax.random.PRNGKey(args.seed))
     opt = AdamW(lr=args.lr, weight_decay=0.0)
     ostate = opt.init(params)
@@ -149,7 +173,8 @@ def main(argv=None):
                                            log_every=5)
         st = trainer.stats()
         print(f"final accuracy {trainer.accuracy(params):.3f}")
-        print(f"ghost rows {st['ghost_rows']}; cross-partition "
+        print(f"ghost rows {st['ghost_rows']}; wire codec "
+              f"{st['wire_codec']}; cross-partition "
               f"{st['bytes_per_step'] / 1024:.1f} KiB/step vs "
               f"{st['sync_bytes_per_step'] / 1024:.1f} KiB/step "
               f"synchronous ({st['comm_savings']:.0%} saved); "
@@ -237,7 +262,7 @@ def main(argv=None):
         dsampler = DistributedMinibatchSampler(
             g, n_dev, [5, 5], args.batch, partitioner=method,
             cache_policy=args.cache, cache_capacity=g.num_nodes // 10,
-            seed=args.seed)
+            wire_codec=args.wire_codec, seed=args.seed)
         mesh, dstep = make_distributed_minibatch_step(
             cfg, opt, n_dev, dsampler.block_shapes())
 
@@ -260,7 +285,8 @@ def main(argv=None):
         prefetch.close()
         st = dsampler.stats()
         xpart_mib = st["cross_partition_bytes"] / 2**20
-        print(f"cross-partition traffic {xpart_mib:.1f} MiB over "
+        print(f"cross-partition traffic {xpart_mib:.1f} MiB "
+              f"(wire codec {st['wire_codec']}) over "
               f"{prefetch.produced} sampled batches "
               f"({args.epochs * steps_per_epoch} trained); halo_hit "
               f"{st['halo_hit_ratio']:.2%}; ghost fraction "
@@ -281,7 +307,7 @@ def main(argv=None):
         sampler = None
 
     cache_ids = CA.CACHE_POLICIES[args.cache](g, g.num_nodes // 10)
-    store = CA.FeatureStore(g, cache_ids)
+    store = CA.FeatureStore(g, cache_ids, codec=args.wire_codec)
     step = jax.jit(GM.make_minibatch_train_step(cfg, opt))
 
     def make_batch():
@@ -295,10 +321,12 @@ def main(argv=None):
     for epoch in range(args.epochs):
         for _ in range(steps_per_epoch):
             mb, seeds = next(loader)
-            store.fetch(mb.input_nodes)     # caching accounting
             blocks = [DeviceGraph.from_block(b) for b in mb.blocks]
-            x_in = jnp.asarray(
-                g.features[np.maximum(mb.blocks[0].src_nodes, 0)])
+            # input rows travel the communication plane: cache misses are
+            # byte-accounted and arrive wire-decoded (zero rows at pads —
+            # pad slots never aggregate, so training is unaffected)
+            src = mb.blocks[0].src_nodes
+            x_in = jnp.asarray(store.fetch_masked(src, src >= 0))
             y = jnp.asarray(g.labels[seeds])
             params, ostate, loss = step(params, ostate, blocks, x_in, y,
                                         jnp.ones_like(y, jnp.float32))

@@ -25,6 +25,7 @@ class GNNConfig:
     appnp_k: int = 4                  # APPNP propagation hops
     appnp_alpha: float = 0.1
     use_kernel: bool = False          # Pallas segment-sum for aggregation
+    wire_codec: str = "fp32"          # comm-plane codec: fp32 | bf16 | int8
 
 
 def init_gnn(cfg: GNNConfig, key) -> List[dict]:
@@ -88,7 +89,8 @@ def forward_blocks(cfg: GNNConfig, params, blocks: Sequence[DeviceGraph],
 
 
 def forward_stale(params, h_own, sg_local, ghosts, refresh, own_rows,
-                  *, axis: str = "g", use_kernel: bool = False):
+                  *, axis: str = "g", use_kernel: bool = False,
+                  codec=None, residuals=None):
     """Staleness-bounded full-graph GCN forward (runs under ``shard_map``).
 
     The asynchronous counterpart of
@@ -116,31 +118,69 @@ def forward_stale(params, h_own, sg_local, ghosts, refresh, own_rows,
         use_kernel: aggregate through the fused Pallas
             gather-scale-segment-sum kernel instead of XLA take +
             ``jax.ops.segment_sum``.
+        codec: optional :class:`repro.core.comm.WireCodec`.  Under a
+            lossy codec, a refreshed row's sender quantizes the plane on
+            the wire (``codec.jax_qdq``; with error feedback iff
+            ``codec.error_feedback``), so every device that does *not*
+            own the row — refreshed or stale — reads the decoded wire
+            value; the owner keeps its exact local activations.
+            ``None`` or the identity fp32 codec compiles the exact
+            pre-codec computation (bit-identical jaxpr).
+        residuals: per-layer ``(N_pad, F_l)`` error-feedback residuals
+            (required iff ``codec.error_feedback``, e.g. int8): the
+            sender adds them before quantizing and the returned
+            residuals carry ``pre - decoded`` for rows refreshed this
+            step.  Codecs without feedback (bf16) quantize statelessly,
+            matching the host :class:`~repro.core.comm.Transport`.
 
     Returns:
-        ``(h, planes)`` — ``h`` is the ``(n_local, num_classes)`` output for
-        owned rows; ``planes`` are the freshly all-gathered global layer
-        outputs ``h_0 .. h_{L-2}`` for the host to write back into the
-        ghost buffers at the refreshed rows.
+        ``(h, planes, residuals_out)`` — ``h`` is the ``(n_local,
+        num_classes)`` output for owned rows; ``planes`` are the global
+        layer outputs ``h_0 .. h_{L-2}`` *as they crossed the wire*
+        (codec-decoded; exact under fp32) for the host to write back into
+        the ghost buffers at the refreshed rows; ``residuals_out`` the
+        updated error-feedback state (``()`` under an exact codec).
 
     Gradient semantics: stale rows enter as constants (no gradient flows
-    into the buffers), refreshed rows participate in the synchronous
-    all-gather and carry exact gradients — the PipeGCN-style bounded-
-    staleness approximation whose S=0 case is bitwise the synchronous step.
+    into the buffers); refreshed rows participate in the synchronous
+    all-gather and carry exact gradients — under a lossy codec via a
+    straight-through estimator (the wire value enters the forward, the
+    gradient of the unquantized activation flows back).  The S=0 fp32
+    case is bitwise the synchronous step.
     """
     es, ed, em, indeg_l, outdeg_all, n_local = sg_local
+    quantize = codec is not None and not codec.identity
     h = h_own
     planes = []
+    res_out = []
     n_layers = len(params)
     for i, p in enumerate(params):
         h_all_fresh = jax.lax.all_gather(h, axis, tiled=True)  # (N_pad, F)
         if i == 0:
             h_all = h_all_fresh          # static inputs: never stale
-        else:
+        elif not quantize:
             planes.append(h_all_fresh)   # global layer-(i-1) output
             use_fresh = refresh[i - 1] | own_rows
             h_all = jnp.where(use_fresh[:, None], h_all_fresh,
                               ghosts[i - 1])
+        else:
+            mask = refresh[i - 1][:, None]
+            if codec.error_feedback:
+                # sender-side error feedback before quantizing the wire
+                # plane; residuals advance only for rows sent this step
+                res = residuals[i - 1]
+                pre = h_all_fresh + jax.lax.stop_gradient(res)
+                dec_raw = codec.jax_qdq(pre)
+                res_out.append(jax.lax.stop_gradient(
+                    jnp.where(mask, pre - dec_raw, res)))
+            else:                        # stateless codec (bf16)
+                dec_raw = codec.jax_qdq(h_all_fresh)
+            # straight-through: forward sees the wire value, backward the
+            # exact all-gather (refreshed rows keep exact gradients)
+            dec = h_all_fresh + jax.lax.stop_gradient(dec_raw - h_all_fresh)
+            planes.append(dec)           # wire view: what receivers store
+            h_all = jnp.where(own_rows[:, None], h_all_fresh,
+                              jnp.where(mask, dec, ghosts[i - 1]))
         hw = h_all @ p["w"]
         coef = (jax.lax.rsqrt(jnp.take(outdeg_all, es))
                 * jax.lax.rsqrt(jnp.take(indeg_l, ed)))
@@ -148,7 +188,7 @@ def forward_stale(params, h_own, sg_local, ghosts, refresh, own_rows,
                                      use_kernel=use_kernel) + p["b"]
         if i + 1 < n_layers:
             h = jax.nn.relu(h)
-    return h, planes
+    return h, planes, tuple(res_out)
 
 
 def forward_blocks_cached(cfg: GNNConfig, params,

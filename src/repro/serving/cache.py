@@ -20,16 +20,21 @@ same staleness substrate the training-side
 
 Feature traffic accounting rides on :class:`repro.core.caching.FeatureStore`
 (the repo's existing byte-accounting substrate): the cache owns the store
-and exposes combined hit/byte numbers.
+and exposes combined hit/byte numbers.  Both the feature pulls and the
+cache-*fill* payloads (freshly computed embedding rows shipped into the
+cache) travel through the unified communication plane
+(:mod:`repro.core.comm`), so a ``bf16``/``int8`` wire codec compresses —
+and byte-accounts — every remote row the server moves.
 """
 from __future__ import annotations
 
-from typing import Dict, Optional, Sequence, Tuple
+from typing import Dict, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
 from repro.core.caching import (CACHE_POLICIES, NEVER, FeatureStore,
                                 VersionClock, VersionedBuffer)
+from repro.core.comm import Transport, WireCodec
 from repro.graph.structure import Graph
 
 __all__ = ["EmbeddingCache", "NEVER"]
@@ -51,6 +56,11 @@ class EmbeddingCache:
         max_staleness: entries older than this many clock ticks are misses.
         feature_capacity: budget of the input-feature
             :class:`FeatureStore` layer (defaults to ``capacity``).
+        codec: wire codec for remote payloads — both the feature pulls
+            and the cache-fill rows written via :meth:`store` (which are
+            stored *as decoded*, so hits serve exactly what crossed the
+            wire).  ``fp32`` (default) is bit-exact with the pre-codec
+            behavior.
 
     Shape conventions: every lookup/store is *slot-aligned* over a padded
     id vector (``-1`` = empty slot).  Padded slots are neither hits nor
@@ -60,7 +70,8 @@ class EmbeddingCache:
     def __init__(self, g: Graph, layer_dims: Sequence[int], *,
                  policy: str = "degree", capacity: Optional[int] = None,
                  max_staleness: int = 0,
-                 feature_capacity: Optional[int] = None):
+                 feature_capacity: Optional[int] = None,
+                 codec: Union[str, WireCodec] = "fp32"):
         self.g = g
         self.max_staleness = max_staleness
         self.vclock = VersionClock()
@@ -77,11 +88,15 @@ class EmbeddingCache:
         self.planes: Dict[int, VersionedBuffer] = {
             l: VersionedBuffer(self.vclock, rows, d)
             for l, d in enumerate(layer_dims)}
+        # cache fills are remote transfers too: one channel per plane,
+        # error-feedback residuals keyed by cache slot
+        self.fill: Dict[int, Transport] = {
+            l: Transport(codec, n_rows=rows) for l in range(len(layer_dims))}
         # input-feature cache (PaGraph/AliGraph layer of the hierarchy)
         if feature_capacity is None:
             feature_capacity = capacity
         self.features = FeatureStore(
-            g, CACHE_POLICIES[policy](g, feature_capacity))
+            g, CACHE_POLICIES[policy](g, feature_capacity), codec=codec)
         self.hits = 0
         self.misses = 0
 
@@ -118,12 +133,16 @@ class EmbeddingCache:
               mask: np.ndarray) -> None:
         """Write freshly computed rows for admitted nodes (slot-aligned;
         ``mask`` selects which slots to write).  Non-admitted and padded
-        slots are silently skipped."""
+        slots are silently skipped.  The written rows are a cache-*fill*
+        transfer: they cross the communication plane (codec-encoded,
+        byte-accounted) and the plane stores the decoded wire values."""
         ids = np.asarray(ids)
         write = np.asarray(mask, bool) & (ids >= 0)
         write &= self.slot[np.maximum(ids, 0)] >= 0
         rows = self.slot[ids[write]]
-        self.planes[layer].write(rows, np.asarray(values)[write])
+        vals = self.fill[layer].send(np.asarray(values)[write],
+                                     row_ids=rows)
+        self.planes[layer].write(rows, vals)
 
     # -- consistency -------------------------------------------------------
     def tick(self, n: int = 1) -> None:
@@ -157,11 +176,15 @@ class EmbeddingCache:
 
     def stats(self) -> dict:
         """Combined embedding + feature-layer counters for summaries."""
+        fill_bytes = sum(t.total_bytes for t in self.fill.values())
         return {
             "embedding_hit_ratio": self.hit_ratio,
             "embedding_hits": self.hits,
             "embedding_misses": self.misses,
             "feature_hit_ratio": self.features.hit_ratio,
             "feature_bytes": self.features.transferred_bytes,
+            "fill_bytes": fill_bytes,
+            "wire_bytes": self.features.transferred_bytes + fill_bytes,
+            "wire_codec": self.features.codec.name,
             "clock": self.clock,
         }

@@ -114,10 +114,12 @@ class GNNInferenceServer:
         self.batcher = BucketedBatcher(buckets, max_wait_s=max_wait_s)
         self.use_cache = cache_policy != "none"
         # one cached plane: the (post-relu) hidden state entering the
-        # final layer — dimension ``hidden`` for every arch in the zoo
+        # final layer — dimension ``hidden`` for every arch in the zoo.
+        # cfg.wire_codec selects the communication-plane wire format for
+        # feature pulls AND cache fills (fp32 = bit-exact default).
         self.cache = EmbeddingCache(
             g, [cfg.hidden], policy=cache_policy, capacity=cache_capacity,
-            max_staleness=max_staleness)
+            max_staleness=max_staleness, codec=cfg.wire_codec)
         self._forward = jax.jit(
             lambda p, inner, outer, x, ch, fm: GM.forward_blocks_cached(
                 cfg, p, inner, outer, x, ch, fm))
@@ -154,9 +156,13 @@ class GNNInferenceServer:
             ids = np.full((b,), -1, np.int64)
             ids[0] = node_id
             self.serve_batch(MicroBatch([], ids, b, 0.0))
-        # warmup traffic must not pollute serving stats
+        # warmup traffic must not pollute serving stats (counters AND the
+        # communication-plane byte accounting)
         self.cache.hits = self.cache.misses = 0
         self.cache.features.hits = self.cache.features.misses = 0
+        self.cache.features.transport.reset_counters()
+        for t in self.cache.fill.values():
+            t.reset_counters()
 
     # -- the serve loop ----------------------------------------------------
     def run(self, workload: List[InferenceRequest], *,

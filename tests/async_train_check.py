@@ -4,14 +4,20 @@ training — run in a subprocess with
 
 argv: n_dev partitioner
 
-1. Trains 5 full-graph epochs with the asynchronous step at S=0 and with
-   the synchronous pull reference
+1. Trains 5 full-graph epochs with the asynchronous step at S=0 under the
+   default fp32 wire codec and with the synchronous pull reference
    (:func:`repro.core.propagation.make_distributed_gcn_step`) from the
    same init, then demands every parameter agree to <= 1e-5 — S=0 must
-   degrade *exactly* to the synchronous halo exchange.
+   degrade *exactly* to the synchronous halo exchange, proving the
+   communication-plane refactor is behavior-preserving.
 2. Re-runs at S=1 and S=2 and demands cross-partition bytes/step strictly
    decrease as the staleness bound grows (each ghost row crosses the wire
    at most every S+1 steps).
+3. Codec matrix: re-runs S=0 with the int8 wire codec (every ghost read
+   is a quantized wire value + error feedback) and demands the final
+   loss stay within late_rel < 0.05 of the synchronous reference, with
+   bytes/step <= 35% of the fp32 run (hidden=32: 8 bytes/row of scale
+   metadata keep the per-row ratio at (32+8)/128 ≈ 31%).
 """
 import os
 import sys
@@ -74,7 +80,21 @@ for S in (1, 2):
 assert bytes_per_step[0] > bytes_per_step[1] > bytes_per_step[2], \
     bytes_per_step
 
+# -- int8 wire codec at S=0: compressed bytes, bounded loss drift ------------
+cfg8 = GNNConfig(arch="gcn", feat_dim=16, hidden=32, num_classes=4,
+                 wire_codec="int8")
+tr8 = AsyncFullGraphTrainer(g, cfg8, opt, N_DEV, partitioner=METHOD,
+                            staleness=0)
+p8, o8, loss_8 = tr8.run(params0, opt.init(params0), EPOCHS)
+assert np.isfinite(loss_8), loss_8
+late_rel = abs(loss_8 - float(loss_r)) / abs(float(loss_r))
+assert late_rel < 0.05, (loss_8, float(loss_r), late_rel)
+bytes_int8 = tr8.stats()["bytes_per_step"]
+ratio = bytes_int8 / bytes_per_step[0]
+assert ratio <= 0.35, (bytes_int8, bytes_per_step[0])
+
 print(f"PASS async-equivalence n_dev={N_DEV} part={METHOD} "
       f"maxdiff={maxdiff:.2e} "
       f"bytes/step S0={bytes_per_step[0]:.0f} S1={bytes_per_step[1]:.0f} "
-      f"S2={bytes_per_step[2]:.0f}")
+      f"S2={bytes_per_step[2]:.0f} "
+      f"int8_late_rel={late_rel:.3f} int8_bytes_ratio={ratio:.2f}")

@@ -244,8 +244,10 @@ def test_capacity_zero_admits_nothing(graph):
 
 def test_fetch_masked_all_false_transfers_nothing(graph):
     """Regression: a fetch_masked call whose ``needed`` mask selects no
-    rows must add 0 bytes — no per-RPC header, no hits/misses."""
-    from repro.core.caching import HEADER_BYTES, FeatureStore
+    rows must add 0 bytes — no per-RPC header, no hits/misses.  The
+    envelope constant is the communication plane's canonical one."""
+    from repro.core.caching import FeatureStore
+    from repro.core.comm import HEADER_BYTES
     store = FeatureStore(graph, np.zeros(0, np.int64))
     ids = np.asarray([1, 2, -1])
     out = store.fetch_masked(ids, np.zeros(3, bool))
