@@ -26,6 +26,8 @@ EXTRA_STAGES = {
     "comm": "2-device int8 wire-codec full-graph subprocess (finite "
             "losses, compressed bytes/step)",
     "docs": "markdown links + public-API docstrings (scripts/check_docs.py)",
+    "obs": "telemetry plane: short serve+train launcher runs with "
+           "--metrics-out/--trace-out, Prometheus + JSONL validated",
 }
 
 if any(a in ("-h", "--help") for a in sys.argv[1:]):
@@ -43,6 +45,7 @@ RUN_DIST = ONLY is None or "dist_gnn" in ONLY
 RUN_KERNELS = ONLY is None or "kernels" in ONLY
 RUN_COMM = ONLY is None or "comm" in ONLY
 RUN_DOCS = ONLY is None or "docs" in ONLY
+RUN_OBS = ONLY is None or "obs" in ONLY
 ARCHES = [a for a in (ONLY or ARCH_IDS) if a not in EXTRA_STAGES]
 
 
@@ -176,6 +179,46 @@ if RUN_COMM:
     # and report codec-compressed bytes/step
     run_subprocess_check("comm", "comm_train_check.py",
                          ["2", "int8"], "PASS comm-train")
+
+if RUN_OBS:
+    # telemetry plane end-to-end: both launchers run with
+    # --metrics-out/--trace-out; the Prometheus text must parse, carry
+    # the expected series, and the JSONL traces must validate
+    import os
+    import subprocess
+    import tempfile
+
+    from repro.core.telemetry import parse_prometheus, validate_trace_jsonl
+
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(root, "src")
+    env.pop("XLA_FLAGS", None)
+    with tempfile.TemporaryDirectory() as td:
+        runs = {
+            "serve": ["-m", "repro.launch.serve_gnn", "--nodes", "96",
+                      "--feat-dim", "8", "--hidden", "16", "--requests",
+                      "24", "--fanouts", "3", "3", "--buckets", "1", "4"],
+            "train": ["-m", "repro.launch.train_gnn", "--minibatch",
+                      "--nodes", "96", "--feat-dim", "8", "--hidden",
+                      "16", "--epochs", "1", "--batch", "24"],
+        }
+        want_series = {"serve": "serving_request_latency_seconds_count",
+                       "train": "train_step_seconds_count"}
+        for name, argv in runs.items():
+            prom = os.path.join(td, f"{name}.prom")
+            trace = os.path.join(td, f"{name}.jsonl")
+            r = subprocess.run(
+                [sys.executable, *argv, "--metrics-out", prom,
+                 "--trace-out", trace],
+                capture_output=True, text=True, timeout=600, env=env)
+            assert r.returncode == 0, r.stdout + r.stderr
+            parsed = parse_prometheus(open(prom).read())
+            assert want_series[name] in parsed, (name, sorted(parsed))
+            n_ev = validate_trace_jsonl(trace)
+            assert n_ev > 0, (name, trace)
+            print(f"OK {'obs_' + name:24s} series={len(parsed)} "
+                  f"trace_events={n_ev}")
 
 if RUN_DOCS:
     # docs tier: intra-repo markdown links resolve and every exported

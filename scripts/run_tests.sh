@@ -12,6 +12,9 @@
 #                                   # (finite losses, compressed bytes)
 #   scripts/run_tests.sh docs       # intra-repo markdown links + public-API
 #                                   # docstrings (scripts/check_docs.py)
+#   scripts/run_tests.sh obs        # telemetry-plane tier: registry/tracer
+#                                   # units + the 2-device serve+train
+#                                   # snapshot cross-check subprocess
 #   scripts/run_tests.sh all        # everything
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -29,7 +32,10 @@ case "$tier" in
     python -m pytest -q -m "not distributed" tests/test_comm.py "$@"
     exec python tests/comm_train_check.py 2 int8 ;;
   docs)  exec python scripts/check_docs.py "$@" ;;
+  obs)
+    python -m pytest -q -m "not distributed" tests/test_telemetry.py "$@"
+    exec python tests/telemetry_check.py ;;
   all)   exec python -m pytest -q "$@" ;;
-  *) echo "usage: $0 [tier1|tier2|kernels|comm|docs|all] [pytest args...]" >&2
+  *) echo "usage: $0 [tier1|tier2|kernels|comm|docs|obs|all] [pytest args...]" >&2
      exit 2 ;;
 esac

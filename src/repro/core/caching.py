@@ -38,6 +38,7 @@ import numpy as np
 # HEADER_BYTES is canonically defined by the communication plane
 # (re-exported here for the subsystems that historically imported it
 # from caching)
+from repro.core import telemetry
 from repro.core.comm import HEADER_BYTES, Transport, WireCodec
 from repro.graph.structure import Graph
 
@@ -127,6 +128,11 @@ class FeatureStore:
             and keeps the historical raw-float accounting; ``bf16`` /
             ``int8`` shrink ``bytes_per_row`` and return the receiver's
             decoded view of every miss row).
+        path: telemetry label for this store's transfer path — names
+            both its :class:`~repro.core.comm.Transport` channel
+            (``comm_*`` series) and its
+            ``cache_lookups_total{cache=<path>,result=hit|miss}``
+            counters in :mod:`repro.core.telemetry`.
 
     Shape convention: :meth:`fetch_masked` is slot-aligned over padded id
     vectors (``-1`` = pad slot) and returns zero rows at unneeded slots,
@@ -134,17 +140,23 @@ class FeatureStore:
     """
 
     def __init__(self, g: Graph, cache_ids: np.ndarray, *,
-                 codec: Union[str, WireCodec] = "fp32"):
+                 codec: Union[str, WireCodec] = "fp32",
+                 path: str = "features"):
         self.g = g
         self.cached = np.zeros(g.num_nodes, bool)
         self.cached[cache_ids] = True
-        self.transport = Transport(codec, n_rows=g.num_nodes)
+        self.transport = Transport(codec, n_rows=g.num_nodes, path=path)
         self.codec = self.transport.codec
         self.bytes_per_row = (
             self.codec.wire_bytes_per_row(g.features.shape[1])
             if g.features is not None else 4)
         self.hits = 0
         self.misses = 0
+        self._m_hits = telemetry.counter(
+            "cache_lookups_total", "cache lookups by result",
+            cache=path, result="hit")
+        self._m_misses = telemetry.counter(
+            "cache_lookups_total", cache=path, result="miss")
 
     @property
     def requests(self) -> int:
@@ -164,9 +176,11 @@ class FeatureStore:
         ids = ids[ids >= 0]
         hit = self.cached[ids]
         self.hits += int(hit.sum())
+        self._m_hits.inc(int(hit.sum()))
         miss = ~hit
         miss_rows = int(miss.sum())
         self.misses += miss_rows
+        self._m_misses.inc(miss_rows)
         if self.g.features is None:
             if miss_rows:
                 self.transport.account_opaque(miss_rows, 4)
@@ -196,9 +210,11 @@ class FeatureStore:
         remote = needed & ~self._local_rows_mask(safe, needed)
         hit = self.cached[safe] & remote
         self.hits += int(hit.sum())
+        self._m_hits.inc(int(hit.sum()))
         miss = remote & ~hit
         miss_rows = int(miss.sum())
         self.misses += miss_rows
+        self._m_misses.inc(miss_rows)
         if self.g.features is None:
             if miss_rows:
                 self.transport.account_opaque(miss_rows, 4)
@@ -209,6 +225,18 @@ class FeatureStore:
         if miss_rows:
             out[miss] = self._pull_remote(out[miss], safe[miss])
         return out
+
+    def reset_stats(self) -> None:
+        """Zero hit/miss counters and the transport's traffic counters
+        (error-feedback residuals are kept).  The telemetry series are
+        reset in lockstep so exposed metrics keep matching these
+        counters — the warmup-exclusion entry point (callers must not
+        poke ``hits``/``misses`` directly)."""
+        self.hits = 0
+        self.misses = 0
+        self._m_hits.reset()
+        self._m_misses.reset()
+        self.transport.reset_counters()
 
     @property
     def hit_ratio(self) -> float:

@@ -43,6 +43,8 @@ from typing import Dict, Optional, Union
 
 import numpy as np
 
+from repro.core import telemetry
+
 # per-RPC envelope cost of one remote transfer (DistDGL KVStore-style
 # request header: keys, shard route, lengths) — charged once per send
 # that actually moves rows, never for sends fully served locally.  This
@@ -330,11 +332,19 @@ class Transport:
             (``None`` = stateless sends, residuals disabled; the value
             bounds nothing — residual rows are allocated per *touched*
             id via :class:`ResidualStore`).
+        path: telemetry label naming the transfer path this channel
+            serves (``"serving.features"``, ``"minibatch.features"``,
+            ``"serving.fill"``, ...).  Every send is mirrored into the
+            process telemetry plane (:mod:`repro.core.telemetry`) as
+            ``comm_bytes_total{path,codec,kind=payload|header}`` /
+            ``comm_rows_total`` / ``comm_sends_total`` — transports
+            sharing a path aggregate into the same series.
     """
 
     def __init__(self, codec: Union[str, WireCodec] = "fp32", *,
-                 n_rows: Optional[int] = None):
+                 n_rows: Optional[int] = None, path: str = "default"):
         self.codec = resolve_codec(codec)
+        self.path = path
         self._n_rows = n_rows if n_rows else 0
         self._ef_enabled = bool(n_rows) and self.codec.error_feedback
         self.residuals: Optional[ResidualStore] = None    # lazy, per dim
@@ -342,6 +352,25 @@ class Transport:
         self.header_bytes = 0
         self.rows_sent = 0
         self.requests = 0
+        lab = dict(path=path, codec=self.codec.name)
+        self._m_payload = telemetry.counter(
+            "comm_bytes_total", "bytes moved by the communication plane",
+            kind="payload", **lab)
+        self._m_header = telemetry.counter(
+            "comm_bytes_total", kind="header", **lab)
+        self._m_rows = telemetry.counter(
+            "comm_rows_total", "rows moved by the communication plane",
+            **lab)
+        self._m_sends = telemetry.counter(
+            "comm_sends_total", "RPCs issued by the communication plane",
+            **lab)
+
+    def _record(self, payload: int, n_rows: int) -> None:
+        """Mirror one accounted send into the telemetry plane."""
+        self._m_payload.inc(payload)
+        self._m_header.inc(HEADER_BYTES)
+        self._m_rows.inc(n_rows)
+        self._m_sends.inc()
 
     @property
     def total_bytes(self) -> int:
@@ -371,10 +400,12 @@ class Transport:
             # fast path: fp32 is the wire format — account the send and
             # hand the rows through untouched (zero copies on the
             # default-codec hot paths)
-            self.payload_bytes += n * self.codec.wire_bytes_per_row(dim)
+            payload = n * self.codec.wire_bytes_per_row(dim)
+            self.payload_bytes += payload
             self.header_bytes += HEADER_BYTES
             self.rows_sent += n
             self.requests += 1
+            self._record(payload, n)
             return rows
         res = self._residuals_for(dim)
         if res is not None and row_ids is not None:
@@ -391,6 +422,7 @@ class Transport:
         self.header_bytes += HEADER_BYTES
         self.rows_sent += n
         self.requests += 1
+        self._record(payload.nbytes, n)
         return out
 
     def account_opaque(self, n_rows: int, bytes_per_row: int) -> None:
@@ -402,15 +434,24 @@ class Transport:
         self.header_bytes += HEADER_BYTES
         self.rows_sent += n_rows
         self.requests += 1
+        self._record(n_rows * bytes_per_row, n_rows)
 
     def reset_counters(self) -> None:
         """Zero the traffic counters (error-feedback residuals are kept —
         they are sender state, not accounting).  Used to exclude warmup
-        traffic from reported stats."""
+        traffic from reported stats.  The channel's telemetry series are
+        reset too so the exposed ``comm_*`` numbers keep matching the
+        instance counters (note: transports sharing a ``path`` share the
+        series, so a reset excludes *everyone's* pre-reset traffic — in
+        practice same-path transports are reset together, e.g. serving
+        warmup)."""
         self.payload_bytes = 0
         self.header_bytes = 0
         self.rows_sent = 0
         self.requests = 0
+        for m in (self._m_payload, self._m_header, self._m_rows,
+                  self._m_sends):
+            m.reset()
 
     def stats(self) -> dict:
         """Lifetime channel counters for summaries."""

@@ -35,7 +35,8 @@ from typing import List, Optional, Sequence
 
 import numpy as np
 
-from repro.core.caching import VersionClock, VersionedBuffer
+from repro.core import telemetry
+from repro.core.caching import NEVER, VersionClock, VersionedBuffer
 from repro.core.comm import HEADER_BYTES, WireCodec, resolve_codec
 from repro.core.partitioning import EdgeCutPartition
 from repro.graph.structure import Graph
@@ -250,6 +251,26 @@ class HaloExchange:
         self.steps_planned = 0
         self.total_bytes = 0
         self.total_rows = 0
+        # telemetry: the halo path has no Transport (its traffic is priced
+        # analytically per plan), so it feeds the shared comm_* series
+        # directly, plus its own refresh/age/violation series
+        lab = dict(path="halo", codec=self.codec.name)
+        self._m_payload = telemetry.counter("comm_bytes_total",
+                                            kind="payload", **lab)
+        self._m_header = telemetry.counter("comm_bytes_total",
+                                           kind="header", **lab)
+        self._m_rows = telemetry.counter("comm_rows_total", **lab)
+        self._m_refresh = telemetry.counter(
+            "halo_refresh_rows_total",
+            "ghost copies refreshed synchronously (all layers)")
+        self._m_age = telemetry.histogram(
+            "halo_ghost_age", "age (steps) refreshed ghost rows reached "
+            "before refresh (first fills excluded)",
+            buckets=telemetry.DEFAULT_COUNT_BUCKETS)
+        self._m_viol = telemetry.counter(
+            "halo_staleness_violations_total",
+            "ghost rows left older than the bound after planning "
+            "(structurally 0 — a nonzero value is a bug)")
 
     # -- refresh planning --------------------------------------------------
     def plan_refresh(self) -> RefreshPlan:
@@ -279,6 +300,13 @@ class HaloExchange:
                 if len(idx):
                     oldest = idx[np.argsort(-age[idx], kind="stable")]
                     mask[oldest[:extra]] = True
+            # telemetry: the age each refreshed row reached (first fills
+            # from NEVER have no meaningful age) + the structural guard
+            # that planning left no ghost row over the bound
+            seen = mask & (buf.version != NEVER)
+            self._m_age.observe_batch(age[seen])
+            self._m_viol.inc(int((self.ghost_rows & ~mask
+                                  & (age > self.max_staleness)).sum()))
             buf.version[mask] = now          # values arrive in write_planes
             masks.append(mask)
             rows_moved += int(self.copies[mask].sum())
@@ -289,6 +317,10 @@ class HaloExchange:
         self.steps_planned += 1
         self.total_rows += rows_moved
         self.total_bytes += payload + headers
+        self._m_payload.inc(payload)
+        self._m_header.inc(headers)
+        self._m_rows.inc(rows_moved)
+        self._m_refresh.inc(rows_moved)
         return RefreshPlan(now, masks, rows_moved, payload, headers)
 
     def write_planes(self, plan: RefreshPlan,

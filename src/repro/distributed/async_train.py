@@ -54,6 +54,7 @@ import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.core import telemetry
 from repro.core.comm import resolve_codec
 from repro.core.halo import HaloExchange, build_halo
 from repro.core.partitioning import EdgeCutPartition
@@ -223,6 +224,10 @@ class AsyncFullGraphTrainer:
         self.consumed_bytes = 0
         self.consumed_rows = 0
         self.step_times_s: List[float] = []
+        self._m_step = telemetry.histogram(
+            "train_step_seconds", "wall time per executed training step",
+            buckets=telemetry.DEFAULT_TIME_BUCKETS,
+            mode="fullgraph_async")
 
     # -- training loop -----------------------------------------------------
     def run(self, params, opt_state, epochs: int, *, log_every: int = 0,
@@ -265,7 +270,9 @@ class AsyncFullGraphTrainer:
                           in zip(masks, planes, ghosts)]
                 self.exchange.write_planes(
                     plan, [np.asarray(pl) for pl in planes])
-                self.step_times_s.append(time.perf_counter() - t0)
+                dt = time.perf_counter() - t0
+                self.step_times_s.append(dt)
+                self._m_step.observe(dt)
                 self.steps_run += 1
                 self.consumed_bytes += plan.bytes
                 self.consumed_rows += plan.rows_moved

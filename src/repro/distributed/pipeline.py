@@ -29,6 +29,7 @@ import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.core import telemetry
 from repro.core.abstraction import DeviceGraph
 from repro.core.comm import resolve_codec
 from repro.core.propagation import AXIS
@@ -81,6 +82,11 @@ class HostPrefetcher:
     def __init__(self, make_batch: Callable[[], object], *, depth: int = 2):
         self.sample_s = 0.0
         self.produced = 0
+        self._m_stall = telemetry.counter(
+            "prefetch_stall_seconds_total",
+            "consumer seconds blocked on the prefetch queue (un-hidden "
+            "host-side sampling time)")
+        self._stall_seen = 0.0
 
         def timed():
             t0 = time.perf_counter()
@@ -96,7 +102,13 @@ class HostPrefetcher:
         return self
 
     def __next__(self):
-        return next(self.loader)
+        item = next(self.loader)
+        # telemetry counters are monotone: feed them the *delta* of the
+        # loader's cumulative idle clock since the last batch
+        stall = self.loader.idle_s
+        self._m_stall.inc(max(0.0, stall - self._stall_seen))
+        self._stall_seen = stall
+        return item
 
     @property
     def wait_s(self) -> float:

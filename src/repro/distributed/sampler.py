@@ -42,8 +42,9 @@ class PartitionFeatureStore(FeatureStore):
     per-RPC header, via the shared :class:`repro.core.comm.Transport`)."""
 
     def __init__(self, g: Graph, owned_ids: np.ndarray,
-                 cache_ids: np.ndarray, *, codec="fp32"):
-        super().__init__(g, cache_ids, codec=codec)
+                 cache_ids: np.ndarray, *, codec="fp32",
+                 path: str = "minibatch.features"):
+        super().__init__(g, cache_ids, codec=codec, path=path)
         self.owned = np.zeros(g.num_nodes, bool)
         self.owned[owned_ids] = True
         self.local_rows = 0

@@ -21,6 +21,7 @@ import warnings
 import jax
 import jax.numpy as jnp
 
+from repro.core import telemetry
 from repro.kernels import flash_attention as _fa
 from repro.kernels import segment_sum as _ss
 from repro.kernels import ssd_chunk as _ssd
@@ -28,6 +29,29 @@ from repro.kernels import ssd_chunk as _ssd
 
 def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
+
+
+# Dispatch counters.  The wrapper bodies below run when Python calls them
+# — eagerly, or ONCE per shape at trace time when embedded in an outer
+# ``jit`` — so these count *dispatch decisions* (which implementation the
+# capacity check selected for a shape), not per-step kernel launches.
+_m_dispatch_ss = telemetry.counter(
+    "kernel_dispatch_total", "kernel wrapper dispatch decisions "
+    "(trace-time inside jit)", kernel="segment_sum", impl="blocked")
+_m_dispatch_fused = telemetry.counter(
+    "kernel_dispatch_total", kernel="gather_scale_segment_sum",
+    impl="fused")
+_m_dispatch_unfused = telemetry.counter(
+    "kernel_dispatch_total", kernel="gather_scale_segment_sum",
+    impl="unfused_fallback")
+# Modeled HBM traffic (total fwd+bwd bytes) of the most recent dispatch,
+# from the analytic models in :mod:`repro.kernels.segment_sum`
+_m_hbm_fused = telemetry.gauge(
+    "kernel_hbm_model_bytes", "modeled HBM bytes (fwd+bwd) of the latest "
+    "dispatched shape", kernel="gather_scale_segment_sum", impl="fused")
+_m_hbm_unfused = telemetry.gauge(
+    "kernel_hbm_model_bytes", kernel="gather_scale_segment_sum",
+    impl="unfused_fallback")
 
 
 @functools.partial(jax.jit, static_argnames=("num_segments", "interpret"))
@@ -39,6 +63,7 @@ def _segment_sum_jit(msgs, seg_ids, num_segments: int, interpret: bool):
 def segment_sum(msgs, seg_ids, num_segments: int):
     """Differentiable blocked segment-sum (scatter-add); the VJP is a
     blocked gather kernel.  See :mod:`repro.kernels.segment_sum`."""
+    _m_dispatch_ss.inc()
     return _segment_sum_jit(msgs, seg_ids, num_segments,
                             interpret=not _on_tpu())
 
@@ -77,6 +102,7 @@ def gather_scale_segment_sum(h, edge_src, edge_dst, coef, num_dst: int):
     so ``use_kernel=True`` never hits the VMEM assert from this path.
     """
     S, F = h.shape
+    E = len(edge_src)
     interpret = not _on_tpu()
     if not _ss.fused_fits(S, num_dst, F):
         key = (S, num_dst, F)
@@ -87,8 +113,13 @@ def gather_scale_segment_sum(h, edge_src, edge_dst, coef, num_dst: int):
                 f"num_src={S}, num_dst={num_dst}, F={F} exceeds the "
                 f"budget; dispatching to the unfused blocked kernel "
                 f"(the (E, F) message tensor WILL cross HBM)")
+        _m_dispatch_unfused.inc()
+        _m_hbm_unfused.set(
+            _ss.hbm_bytes_unfused_kernel(E, F, num_dst)["total"])
         return _gss_unfused_jit(h, edge_src, edge_dst, coef, num_dst,
                                 interpret=interpret)
+    _m_dispatch_fused.inc()
+    _m_hbm_fused.set(_ss.hbm_bytes_fused_kernel(E, F, num_dst, S)["total"])
     return _gss_jit(h, edge_src, edge_dst, coef, num_dst,
                     interpret=interpret)
 

@@ -50,13 +50,39 @@ def parse_args(argv=None):
                     help="Pallas segment-sum for the Gather step")
     ap.add_argument("--train-epochs", type=int, default=0,
                     help="optionally pre-train the model full-graph")
+    ap.add_argument("--metrics-out", default="",
+                    help="enable telemetry and write the Prometheus "
+                         "text-format exposition here on exit "
+                         "(repro.core.telemetry)")
+    ap.add_argument("--trace-out", default="",
+                    help="enable telemetry and write the JSONL span "
+                         "trace here on exit")
     ap.add_argument("--seed", type=int, default=0)
     return ap.parse_args(argv)
 
 
 def main(argv=None):
+    """Parse args, serve the workload, and (when asked) dump the
+    telemetry plane on exit — metrics as Prometheus text, spans as JSONL
+    (see docs/observability.md)."""
     args = parse_args(argv)
+    from repro.core import telemetry
+    if args.metrics_out or args.trace_out:
+        telemetry.set_enabled(True)
+    try:
+        return run(args)
+    finally:
+        if args.metrics_out:
+            telemetry.get_registry().write_prometheus(args.metrics_out)
+            print(f"telemetry: metrics -> {args.metrics_out}")
+        if args.trace_out:
+            n = telemetry.get_registry().tracer.export_jsonl(args.trace_out)
+            print(f"telemetry: {n} trace events -> {args.trace_out}")
 
+
+def run(args):
+    """The actual serving driver; ``main`` wraps it with the telemetry
+    dump."""
     import jax
     import jax.numpy as jnp
     import numpy as np

@@ -34,6 +34,7 @@ from __future__ import annotations
 import argparse
 import os
 import sys
+import time
 
 
 def parse_args(argv=None):
@@ -87,6 +88,13 @@ def parse_args(argv=None):
                          "feature fetches (--minibatch).  fp32 is "
                          "bit-exact; int8 cuts bytes ~4x with "
                          "error-feedback residuals")
+    ap.add_argument("--metrics-out", default="",
+                    help="enable telemetry and write the Prometheus "
+                         "text-format exposition here on exit "
+                         "(repro.core.telemetry)")
+    ap.add_argument("--trace-out", default="",
+                    help="enable telemetry and write the JSONL span "
+                         "trace here on exit")
     ap.add_argument("--seed", type=int, default=0)
     return ap.parse_args(argv)
 
@@ -104,7 +112,27 @@ def resolve_edge_cut(g, n_dev: int, method: str) -> str:
 
 
 def main(argv=None):
+    """Parse args, run the selected training path, and (when asked) dump
+    the telemetry plane on exit — metrics as Prometheus text, spans as
+    JSONL (see docs/observability.md)."""
     args = parse_args(argv)
+    from repro.core import telemetry
+    if args.metrics_out or args.trace_out:
+        telemetry.set_enabled(True)
+    try:
+        return run(args)
+    finally:
+        if args.metrics_out:
+            telemetry.get_registry().write_prometheus(args.metrics_out)
+            print(f"telemetry: metrics -> {args.metrics_out}")
+        if args.trace_out:
+            n = telemetry.get_registry().tracer.export_jsonl(args.trace_out)
+            print(f"telemetry: {n} trace events -> {args.trace_out}")
+
+
+def run(args):
+    """The actual training driver (all four paths); ``main`` wraps it
+    with the telemetry dump."""
     if args.wire_codec != "fp32" and not (args.minibatch or args.fullgraph):
         # the synchronous full-graph modes (pull/push/stale/hysync) and
         # the single-device full-batch trainer are not on the
@@ -126,6 +154,7 @@ def main(argv=None):
     from repro.core import caching as CA
     from repro.core import propagation as PR
     from repro.core import sampling as SA
+    from repro.core import telemetry
     from repro.core.abstraction import DeviceGraph
     from repro.core.scheduling import PipelinedLoader
     from repro.core.sync import HaloCache, SyncPolicy
@@ -273,10 +302,16 @@ def main(argv=None):
         prefetch = HostPrefetcher(make_dist_batch)
         steps_per_epoch = max(1, g.num_nodes // args.batch)
         loss = None
+        m_step = telemetry.histogram(
+            "train_step_seconds", "wall time per executed training step",
+            mode="minibatch_dist")
         for epoch in range(args.epochs):
             for _ in range(steps_per_epoch):
                 arrays = next(prefetch)
-                params, ostate, loss = dstep(params, ostate, arrays)
+                t0 = time.perf_counter()
+                with telemetry.span("train.step", mode="minibatch_dist"):
+                    params, ostate, loss = dstep(params, ostate, arrays)
+                m_step.observe(time.perf_counter() - t0)
             # monitoring only: the ratio also covers the 1-2 batches the
             # prefetcher sampled ahead; exact byte totals come after close
             st = dsampler.stats()
@@ -318,18 +353,24 @@ def main(argv=None):
     loader = PipelinedLoader(make_batch, depth=4, n_workers=2)
     steps_per_epoch = max(1, g.num_nodes // args.batch)
     loss = None
+    m_step = telemetry.histogram(
+        "train_step_seconds", "wall time per executed training step",
+        mode="minibatch_single")
     for epoch in range(args.epochs):
         for _ in range(steps_per_epoch):
             mb, seeds = next(loader)
-            blocks = [DeviceGraph.from_block(b) for b in mb.blocks]
-            # input rows travel the communication plane: cache misses are
-            # byte-accounted and arrive wire-decoded (zero rows at pads —
-            # pad slots never aggregate, so training is unaffected)
-            src = mb.blocks[0].src_nodes
-            x_in = jnp.asarray(store.fetch_masked(src, src >= 0))
-            y = jnp.asarray(g.labels[seeds])
-            params, ostate, loss = step(params, ostate, blocks, x_in, y,
-                                        jnp.ones_like(y, jnp.float32))
+            t0 = time.perf_counter()
+            with telemetry.span("train.step", mode="minibatch_single"):
+                blocks = [DeviceGraph.from_block(b) for b in mb.blocks]
+                # input rows travel the communication plane: cache misses
+                # are byte-accounted and arrive wire-decoded (zero rows at
+                # pads — pad slots never aggregate, training is unaffected)
+                src = mb.blocks[0].src_nodes
+                x_in = jnp.asarray(store.fetch_masked(src, src >= 0))
+                y = jnp.asarray(g.labels[seeds])
+                params, ostate, loss = step(params, ostate, blocks, x_in,
+                                            y, jnp.ones_like(y, jnp.float32))
+            m_step.observe(time.perf_counter() - t0)
         print(f"epoch {epoch:3d} loss {float(loss):.4f} "
               f"cache_hit {store.hit_ratio:.2%} "
               f"fetched {store.transferred_bytes / 2**20:.1f} MiB")

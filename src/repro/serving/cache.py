@@ -32,6 +32,7 @@ from typing import Dict, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
+from repro.core import telemetry
 from repro.core.caching import (CACHE_POLICIES, NEVER, FeatureStore,
                                 VersionClock, VersionedBuffer)
 from repro.core.comm import Transport, WireCodec
@@ -89,16 +90,23 @@ class EmbeddingCache:
             l: VersionedBuffer(self.vclock, rows, d)
             for l, d in enumerate(layer_dims)}
         # cache fills are remote transfers too: one channel per plane,
-        # error-feedback residuals keyed by cache slot
+        # error-feedback residuals keyed by cache slot; all planes share
+        # the "serving.fill" telemetry path
         self.fill: Dict[int, Transport] = {
-            l: Transport(codec, n_rows=rows) for l in range(len(layer_dims))}
+            l: Transport(codec, n_rows=rows, path="serving.fill")
+            for l in range(len(layer_dims))}
         # input-feature cache (PaGraph/AliGraph layer of the hierarchy)
         if feature_capacity is None:
             feature_capacity = capacity
         self.features = FeatureStore(
-            g, CACHE_POLICIES[policy](g, feature_capacity), codec=codec)
+            g, CACHE_POLICIES[policy](g, feature_capacity), codec=codec,
+            path="serving.features")
         self.hits = 0
         self.misses = 0
+        self._m_hits = telemetry.counter(
+            "cache_lookups_total", cache="serving.embedding", result="hit")
+        self._m_misses = telemetry.counter(
+            "cache_lookups_total", cache="serving.embedding", result="miss")
 
     @property
     def clock(self) -> int:
@@ -127,6 +135,8 @@ class EmbeddingCache:
         fresh = valid & plane.fresh_mask(self.max_staleness, row)
         self.hits += int(fresh.sum())
         self.misses += int((valid & ~fresh).sum())
+        self._m_hits.inc(int(fresh.sum()))
+        self._m_misses.inc(int((valid & ~fresh).sum()))
         return plane.values[row], fresh
 
     def store(self, layer: int, ids: np.ndarray, values: np.ndarray,
@@ -168,6 +178,22 @@ class EmbeddingCache:
         self.tick()
 
     # -- stats -------------------------------------------------------------
+    def reset_stats(self) -> None:
+        """Zero the embedding hit/miss counters, the feature layer's
+        stats, and every cache-fill transport — with the matching
+        telemetry series reset in lockstep.  The one warmup-exclusion
+        entry point: callers must use this instead of assigning
+        ``cache.hits``/``cache.features.hits`` (cached values and
+        error-feedback residuals are kept — they are state, not
+        accounting)."""
+        self.hits = 0
+        self.misses = 0
+        self._m_hits.reset()
+        self._m_misses.reset()
+        self.features.reset_stats()
+        for t in self.fill.values():
+            t.reset_counters()
+
     @property
     def hit_ratio(self) -> float:
         """Fraction of non-padded lookups served within the bound."""

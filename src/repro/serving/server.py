@@ -27,7 +27,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import telemetry
 from repro.core.abstraction import DeviceGraph
+from repro.core.telemetry import Histogram
 from repro.graph.structure import Graph
 from repro.models.gnn import model as GM
 from repro.models.gnn.model import GNNConfig
@@ -37,26 +39,41 @@ from repro.serving.request import InferenceRequest, RequestQueue
 from repro.serving.sampler import ServingSampler, needed_feature_mask
 
 
+def _latency_hist() -> Histogram:
+    """Standalone (always-on) latency histogram backing ``ServeStats`` —
+    p50/p99 must work whether or not global telemetry is enabled, so this
+    one is not attached to the registry."""
+    return Histogram("serving_request_latency_seconds",
+                     buckets=telemetry.DEFAULT_TIME_BUCKETS)
+
+
 @dataclasses.dataclass
 class ServeStats:
     """Serve-loop counters: requests served, batches formed, wall time,
-    per-request latencies (virtual-clock seconds), and the set of jitted
-    shapes (``len(jit_shapes)`` bounds recompilation —
-    ≤ one entry per declared bucket)."""
+    per-request latency distribution (virtual-clock seconds, a telemetry
+    :class:`~repro.core.telemetry.Histogram` — the one quantile
+    implementation in the repo), and the set of jitted shapes
+    (``len(jit_shapes)`` bounds recompilation — ≤ one entry per declared
+    bucket)."""
     served: int = 0
     batches: int = 0
     wall_s: float = 0.0
-    latencies_s: List[float] = dataclasses.field(default_factory=list)
+    latency_hist: Histogram = dataclasses.field(default_factory=_latency_hist)
     jit_shapes: set = dataclasses.field(default_factory=set)
 
     @property
     def throughput_rps(self) -> float:
         return self.served / self.wall_s if self.wall_s > 0 else 0.0
 
+    @property
+    def latencies_s(self) -> List[float]:
+        """Recorded per-request latencies in observation order."""
+        return [float(v) for v in self.latency_hist.samples]
+
     def latency_quantile(self, q: float) -> float:
-        if not self.latencies_s:
-            return 0.0
-        return float(np.quantile(np.asarray(self.latencies_s), q))
+        """Exact latency quantile (numpy-style interpolation, via the
+        shared telemetry histogram)."""
+        return self.latency_hist.quantile(q)
 
     def summary(self) -> dict:
         return {
@@ -124,31 +141,61 @@ class GNNInferenceServer:
             lambda p, inner, outer, x, ch, fm: GM.forward_blocks_cached(
                 cfg, p, inner, outer, x, ch, fm))
         self.stats = ServeStats()
+        # telemetry plane (no-ops unless repro.core.telemetry is enabled)
+        self._m_queue = telemetry.gauge(
+            "serving_queue_depth", "admitted requests waiting to batch")
+        self._m_occupancy = telemetry.histogram(
+            "serving_batch_occupancy", "real requests per formed batch",
+            buckets=telemetry.DEFAULT_COUNT_BUCKETS)
+        self._m_latency = telemetry.histogram(
+            "serving_request_latency_seconds",
+            "request latency, virtual-clock seconds (queueing + compute)")
+        self._m_served = telemetry.counter(
+            "serving_requests_total", "requests served to completion")
+        self._m_batches = telemetry.counter(
+            "serving_batches_total", "micro-batches computed")
+        # virtual clock: _vnow advances by the measured wall compute of
+        # each batch (see run()); between updates, virtual time flows at
+        # wall rate from the anchor — which is what lets tracer spans
+        # carry simulated timestamps consistent with reported p50/p99
+        self._vnow = 0.0
+        self._vanchor = time.perf_counter()
+
+    def _virtual_now(self) -> float:
+        """Current virtual-clock reading (the span clock): the last
+        run-loop virtual time plus wall progress since its anchor."""
+        return self._vnow + (time.perf_counter() - self._vanchor)
 
     # -- one micro-batch ---------------------------------------------------
     def serve_batch(self, mb: MicroBatch) -> np.ndarray:
         """Returns (bucket, num_classes) logits (padded slots garbage)."""
-        outer_b = self.sampler.sample_outer(mb.node_ids)
-        ids1 = outer_b.src_nodes
-        cached_h, fresh = self.cache.lookup(0, ids1)
-        miss = (ids1 >= 0) & ~fresh
-        inner_bs = self.sampler.sample_inner(ids1, expand=miss)
-        need = needed_feature_mask(inner_bs, miss)
-        x_in = self.cache.features.fetch_masked(inner_bs[0].src_nodes, need)
+        vclock = self._virtual_now
+        with telemetry.span("serve.batch", clock=vclock, bucket=mb.bucket):
+            with telemetry.span("serve.sample", clock=vclock):
+                outer_b = self.sampler.sample_outer(mb.node_ids)
+                ids1 = outer_b.src_nodes
+                cached_h, fresh = self.cache.lookup(0, ids1)
+                miss = (ids1 >= 0) & ~fresh
+                inner_bs = self.sampler.sample_inner(ids1, expand=miss)
+                need = needed_feature_mask(inner_bs, miss)
+                x_in = self.cache.features.fetch_masked(
+                    inner_bs[0].src_nodes, need)
 
-        inner_dev = [DeviceGraph.from_block(b) for b in inner_bs]
-        outer_dev = DeviceGraph.from_block(outer_b)
-        shape_key = (mb.bucket,
-                     tuple((b.num_dst, b.num_src, len(b.edge_mask))
-                           for b in inner_bs + [outer_b]))
-        self.stats.jit_shapes.add(shape_key)
+            inner_dev = [DeviceGraph.from_block(b) for b in inner_bs]
+            outer_dev = DeviceGraph.from_block(outer_b)
+            shape_key = (mb.bucket,
+                         tuple((b.num_dst, b.num_src, len(b.edge_mask))
+                               for b in inner_bs + [outer_b]))
+            self.stats.jit_shapes.add(shape_key)
 
-        logits, h_fresh = self._forward(
-            self.params, inner_dev, outer_dev, jnp.asarray(x_in),
-            jnp.asarray(cached_h), jnp.asarray(fresh))
-        if self.use_cache:
-            self.cache.store(0, ids1, np.asarray(h_fresh), miss)
-        return np.asarray(logits)
+            with telemetry.span("serve.forward", clock=vclock):
+                logits, h_fresh = self._forward(
+                    self.params, inner_dev, outer_dev, jnp.asarray(x_in),
+                    jnp.asarray(cached_h), jnp.asarray(fresh))
+                logits = np.asarray(logits)
+            if self.use_cache:
+                self.cache.store(0, ids1, np.asarray(h_fresh), miss)
+        return logits
 
     def warmup(self, node_id: int = 0) -> None:
         """Compile every declared bucket once (excluded from stats)."""
@@ -156,13 +203,10 @@ class GNNInferenceServer:
             ids = np.full((b,), -1, np.int64)
             ids[0] = node_id
             self.serve_batch(MicroBatch([], ids, b, 0.0))
-        # warmup traffic must not pollute serving stats (counters AND the
-        # communication-plane byte accounting)
-        self.cache.hits = self.cache.misses = 0
-        self.cache.features.hits = self.cache.features.misses = 0
-        self.cache.features.transport.reset_counters()
-        for t in self.cache.fill.values():
-            t.reset_counters()
+        # warmup traffic must not pollute serving stats: the caches own
+        # their counters (and the matching telemetry series), so reset
+        # through them instead of poking their attributes
+        self.cache.reset_stats()
 
     # -- the serve loop ----------------------------------------------------
     def run(self, workload: List[InferenceRequest], *,
@@ -185,6 +229,7 @@ class GNNInferenceServer:
                 queue.push(workload[i])
                 i += 1
             drained = i >= len(workload)
+            self._m_queue.set(len(queue))
             mb = self.batcher.form(queue, vnow, force=drained)
             if mb is None:
                 # jump to the next event: an arrival, the head-of-line
@@ -201,13 +246,23 @@ class GNNInferenceServer:
                     events.append(next_tick)
                 vnow = max(vnow, min(events))
                 continue
+            # anchor the virtual clock: during this batch's compute,
+            # virtual time = vnow + wall elapsed (exactly how vnow itself
+            # advances below), so spans inside serve_batch land on the
+            # same simulated axis as the reported latencies
+            self._vnow, self._vanchor = vnow, time.perf_counter()
             t0 = time.perf_counter()
             logits = self.serve_batch(mb)
             vnow += time.perf_counter() - t0
+            self._vnow = vnow
+            self._m_occupancy.observe(len(mb.requests))
             for j, r in enumerate(mb.requests):
                 r.logits = logits[mb.slots[j]]
                 r.done_s = vnow
-                self.stats.latencies_s.append(r.latency_s)
+                self.stats.latency_hist.observe(r.latency_s)
+                self._m_latency.observe(r.latency_s)
+            self._m_served.inc(len(mb.requests))
+            self._m_batches.inc()
             self.stats.served += len(mb.requests)
             self.stats.batches += 1
         self.stats.wall_s += time.perf_counter() - t_start

@@ -1,0 +1,283 @@
+"""Telemetry plane invariants (``repro.core.telemetry``).
+
+The contract pinned here:
+
+* :meth:`Histogram.quantile` is EXACT — numpy linear interpolation over
+  the raw samples, property-tested against ``numpy.percentile``;
+* the registry aggregates by ``(name, labels)``: two ``Transport``
+  instances on the same path feed one series;
+* span nesting/ordering survives the JSONL round trip (depth, parent,
+  dense seq);
+* a disabled registry records NOTHING — counters, gauges, histograms,
+  and spans are all single-branch no-ops (the overhead guard in
+  ``benchmarks/bench_serving.py`` prices the enabled side);
+* the Prometheus exposition round-trips through the stdlib validator
+  with cumulative bucket series.
+"""
+import json
+import math
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core import telemetry as T
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.fixture()
+def reg():
+    """A fresh *enabled* global registry, restored after the test (the
+    instrumented modules hold references into the global one, so tests
+    exercise exactly the registry production code uses)."""
+    r = T.get_registry()
+    prev = T.set_enabled(True)
+    r.reset()
+    try:
+        yield r
+    finally:
+        r.reset()
+        T.set_enabled(prev)
+
+
+# ---------------------------------------------------------------------------
+# histogram quantiles vs numpy
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+@pytest.mark.parametrize("q", [0.0, 0.25, 0.5, 0.9, 0.99, 1.0])
+def test_quantile_matches_numpy_percentile(seed, q):
+    rng = np.random.default_rng(seed)
+    samples = rng.lognormal(mean=-3.0, sigma=2.0, size=501).astype(np.float32)
+    h = T.Histogram("h_test", buckets=T.DEFAULT_TIME_BUCKETS)
+    # mix scalar and batched observation paths
+    for v in samples[:100]:
+        h.observe(float(v))
+    h.observe_batch(samples[100:])
+    want = np.percentile(samples.astype(np.float64), q * 100,
+                         method="linear")
+    assert h.quantile(q) == pytest.approx(float(want), rel=1e-6)
+
+
+def test_histogram_bucket_counts_cumulative():
+    h = T.Histogram("h_cum", buckets=[1.0, 10.0, 100.0])
+    for v in (0.5, 5.0, 50.0, 500.0):
+        h.observe(v)
+    cum = h.cumulative_buckets()
+    assert cum == [(1.0, 1), (10.0, 2), (100.0, 3), (math.inf, 4)]
+    assert h.sum == pytest.approx(555.5)
+
+
+def test_histogram_empty_quantile_is_zero():
+    h = T.Histogram("h_empty")
+    assert h.quantile(0.5) == 0.0
+    assert h.count == 0
+
+
+# ---------------------------------------------------------------------------
+# registry aggregation across Transport instances
+# ---------------------------------------------------------------------------
+
+def test_counters_aggregate_across_transports(reg):
+    from repro.core.comm import Transport
+    t1 = Transport("fp32", path="agg.test")
+    t2 = Transport("fp32", path="agg.test")
+    rows = np.ones((4, 8), np.float32)
+    t1.send(rows)
+    t2.send(rows)
+    t2.send(rows)
+    total = reg.total("comm_bytes_total", path="agg.test")
+    assert int(total) == t1.total_bytes + t2.total_bytes
+    assert reg.value("comm_sends_total", path="agg.test",
+                     codec="fp32") == 3
+    assert reg.value("comm_rows_total", path="agg.test",
+                     codec="fp32") == 12
+    # same (name, labels) key -> the SAME metric instance
+    assert reg.counter("comm_sends_total", path="agg.test",
+                       codec="fp32") is t1._m_sends
+    assert t1._m_sends is t2._m_sends
+
+
+def test_transport_reset_keeps_registry_in_lockstep(reg):
+    from repro.core.comm import Transport
+    t = Transport("fp32", path="reset.test")
+    t.send(np.ones((4, 8), np.float32))
+    assert reg.total("comm_bytes_total", path="reset.test") > 0
+    t.reset_counters()
+    assert t.total_bytes == 0
+    assert reg.total("comm_bytes_total", path="reset.test") == 0
+
+
+def test_kind_conflict_rejected(reg):
+    reg.counter("one_name", x="1")
+    with pytest.raises(ValueError, match="already registered"):
+        reg.gauge("one_name", x="2")
+
+
+def test_counter_rejects_negative(reg):
+    c = reg.counter("neg_test")
+    with pytest.raises(ValueError):
+        c.inc(-1)
+
+
+# ---------------------------------------------------------------------------
+# span nesting / ordering / JSONL
+# ---------------------------------------------------------------------------
+
+def test_span_nesting_and_jsonl_roundtrip(reg, tmp_path):
+    with T.span("outer", phase="a"):
+        with T.span("inner1"):
+            pass
+        with T.span("inner2"):
+            with T.span("leaf"):
+                pass
+    path = str(tmp_path / "trace.jsonl")
+    n = reg.tracer.export_jsonl(path)
+    assert n == 4
+    assert T.validate_trace_jsonl(path) == 4
+    evs = [json.loads(l) for l in open(path)]
+    by_name = {e["name"]: e for e in evs}
+    # spans close innermost-first
+    assert [e["name"] for e in evs] == ["inner1", "leaf", "inner2", "outer"]
+    assert [e["seq"] for e in evs] == [0, 1, 2, 3]
+    assert by_name["outer"]["depth"] == 0
+    assert by_name["outer"]["parent"] is None
+    assert by_name["outer"]["attrs"] == {"phase": "a"}
+    assert by_name["inner1"]["parent"] == "outer"
+    assert by_name["inner2"]["depth"] == 1
+    assert by_name["leaf"]["depth"] == 2
+    assert by_name["leaf"]["parent"] == "inner2"
+    # children are contained in the parent on the same clock
+    assert by_name["outer"]["ts"] <= by_name["inner1"]["ts"]
+    assert by_name["inner1"]["dur"] <= by_name["outer"]["dur"]
+
+
+def test_span_custom_clock(reg):
+    t = {"now": 100.0}
+
+    def clk():
+        return t["now"]
+
+    with T.span("virtual", clock=clk):
+        t["now"] = 103.5
+    ev = reg.tracer.events[-1]
+    assert ev["ts"] == 100.0
+    assert ev["dur"] == pytest.approx(3.5)
+
+
+# ---------------------------------------------------------------------------
+# disabled registry: everything is a no-op
+# ---------------------------------------------------------------------------
+
+def test_disabled_registry_records_nothing():
+    r = T.get_registry()
+    prev = T.set_enabled(False)
+    r.reset()
+    try:
+        c = T.counter("noop_c")
+        g = T.gauge("noop_g")
+        h = T.histogram("noop_h")
+        c.inc(5)
+        g.set(7)
+        h.observe(1.0)
+        h.observe_batch(np.ones(10))
+        with T.span("noop_span"):
+            pass
+        assert c.value == 0
+        assert g.value == 0
+        assert h.count == 0 and len(h.samples) == 0
+        assert r.tracer.events == []
+    finally:
+        r.reset()
+        T.set_enabled(prev)
+
+
+def test_standalone_metric_ignores_global_flag():
+    prev = T.set_enabled(False)
+    try:
+        h = T.Histogram("standalone")   # registry=None: always on
+        h.observe(2.0)
+        assert h.count == 1
+        assert h.quantile(0.5) == 2.0
+    finally:
+        T.set_enabled(prev)
+
+
+# ---------------------------------------------------------------------------
+# Prometheus exposition
+# ---------------------------------------------------------------------------
+
+def test_prometheus_roundtrip(reg):
+    reg.counter("bytes_total", "help text", path="x").inc(42)
+    reg.gauge("depth").set(3)
+    h = reg.histogram("lat_seconds", buckets=[0.1, 1.0], mode="m")
+    h.observe(0.05)
+    h.observe(0.5)
+    h.observe(5.0)
+    text = reg.to_prometheus()
+    parsed = T.parse_prometheus(text)
+    assert parsed["bytes_total"][(("path", "x"),)] == 42
+    assert parsed["depth"][()] == 3
+    b = parsed["lat_seconds_bucket"]
+    assert b[(("le", "0.1"), ("mode", "m"))] == 1
+    assert b[(("le", "1.0"), ("mode", "m"))] == 2
+    assert b[(("le", "+Inf"), ("mode", "m"))] == 3
+    assert parsed["lat_seconds_count"][(("mode", "m"),)] == 3
+    assert parsed["lat_seconds_sum"][(("mode", "m"),)] == pytest.approx(5.55)
+    assert "# HELP bytes_total help text" in text
+    assert "# TYPE lat_seconds histogram" in text
+
+
+def test_parse_prometheus_rejects_malformed():
+    with pytest.raises(ValueError):
+        T.parse_prometheus("no_type_line 1")
+    with pytest.raises(ValueError):
+        T.parse_prometheus("# TYPE x counter\nx{bad labels} 1")
+    with pytest.raises(ValueError):
+        T.parse_prometheus("# TYPE x counter\nx notanumber")
+
+
+def test_snapshot_shape(reg):
+    reg.counter("c_total", path="p").inc(3)
+    h = reg.histogram("h_seconds")
+    h.observe_batch([1.0, 2.0, 3.0])
+    snap = reg.snapshot()
+    assert snap["c_total"]["series"]["path=p"] == 3
+    hs = snap["h_seconds"]["series"][""]
+    assert hs["count"] == 3
+    assert hs["p50"] == pytest.approx(2.0)
+
+
+# ---------------------------------------------------------------------------
+# the 2-device serve+train acceptance cross-check (tier-2 / obs tier)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.distributed
+def test_telemetry_plane_cross_check_subprocess():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run(
+        [sys.executable, os.path.join(ROOT, "tests", "telemetry_check.py")],
+        capture_output=True, text=True, timeout=600, env=env)
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "PASS telemetry-plane" in r.stdout, r.stdout
+
+
+# ---------------------------------------------------------------------------
+# serving stats ride the shared histogram
+# ---------------------------------------------------------------------------
+
+def test_servestats_quantiles_use_shared_histogram():
+    from repro.serving.server import ServeStats
+    st = ServeStats()
+    vals = [0.001 * (i + 1) for i in range(100)]
+    for v in vals:
+        st.latency_hist.observe(v)
+    assert st.latencies_s == pytest.approx(vals)
+    assert st.latency_quantile(0.5) == pytest.approx(
+        float(np.percentile(vals, 50)), rel=1e-6)
+    assert isinstance(st.latency_hist, T.Histogram)
