@@ -10,7 +10,10 @@ counters, and written to ``BENCH_serving.json`` at the repo root with
 asserted SLOs (p99 latency ceiling, embedding hit-rate floor for the
 cached policies) plus the telemetry overhead guard: enabling the plane
 must change serve wall time by <= ``OVERHEAD_TOL`` (min-of-3 runs each
-way).  Field glossary in ``docs/benchmarks.md``.
+way).  A replicated-mode row runs the same stream through a 2-replica
+:class:`~repro.serving.router.ReplicaRouter` with one rolling weight
+hot-swap mid-run and asserts zero drops, zero version-torn batches, and
+the same p99 ceiling.  Field glossary in ``docs/benchmarks.md``.
 """
 import copy
 import json
@@ -25,7 +28,8 @@ from repro.core import telemetry
 from repro.graph.datasets import load
 from repro.models.gnn import model as GM
 from repro.models.gnn.model import GNNConfig
-from repro.serving import GNNInferenceServer, poisson_workload
+from repro.serving import (GNNInferenceServer, ReplicaRouter,
+                           poisson_workload)
 
 REQUESTS = 192
 BUCKETS = (1, 4, 16, 32)
@@ -88,6 +92,41 @@ def _snapshot_row(reg, summary, srv) -> dict:
         "fill_bytes": int(fill_bytes),
         "wire_bytes": int(feature_bytes + fill_bytes),
         "batches": int(reg.value("serving_batches_total")),
+    }
+
+
+def _serve_replicated(g, cfg, params, *, n_replicas=2,
+                      hot_swap_every=0) -> dict:
+    """One replicated-mode row: N replicas behind the router under the
+    same Zipf/Poisson stream, with an optional rolling hot-swap mid-run.
+    Zero drops and zero version-torn batches are part of the row (and
+    asserted into the SLO block)."""
+    router = ReplicaRouter(
+        g, cfg, params, n_replicas=n_replicas, policy="least_queue",
+        shared_cache=True, cache_policy="degree",
+        cache_capacity=int(g.num_nodes * 0.2),
+        fanouts=FANOUTS, buckets=BUCKETS, seed=0)
+    wl = poisson_workload(REQUESTS, np.arange(g.num_nodes), 4000.0, seed=1)
+
+    def fresh(version):
+        return GM.init_gnn(cfg, jax.random.PRNGKey(version))
+
+    stats = router.run(copy.deepcopy(wl), hot_swap_every=hot_swap_every,
+                       new_params_fn=fresh if hot_swap_every else None)
+    out = router.summary()
+    return {
+        "served": out["served"],
+        "dropped": out["dropped"],
+        "torn_batches": out["torn_batches"],
+        "p50_ms": out["p50_ms"],
+        "p99_ms": out["p99_ms"],
+        "throughput_rps": out["throughput_rps"],
+        "embedding_hit_ratio": out["embedding_hit_ratio"],
+        "wire_bytes": out["wire_bytes"],
+        "replicas": n_replicas,
+        "replicas_peak": stats.replicas_peak,
+        "hot_swaps": out["hot_swaps"],
+        "version_counts": out["version_counts"],
     }
 
 
@@ -156,6 +195,19 @@ def main():
              f"emb_hit={staleness[str(s)]['embedding_hit_ratio']:.3f};"
              f"bytes={staleness[str(s)]['feature_bytes']}")
 
+    # replicated mode: 2 replicas + one rolling hot-swap under the same
+    # stream — zero drops and zero torn batches are asserted below
+    reg.reset()
+    replicated = _serve_replicated(g, cfg, params, n_replicas=2,
+                                   hot_swap_every=REQUESTS // 2)
+    emit("serving/replicated2",
+         1e6 / max(replicated["throughput_rps"], 1e-9),
+         f"rps={replicated['throughput_rps']:.0f};"
+         f"p99ms={replicated['p99_ms']:.2f};"
+         f"dropped={replicated['dropped']};"
+         f"torn={replicated['torn_batches']};"
+         f"swaps={replicated['hot_swaps']}")
+
     telemetry.set_enabled(prev_enabled)
     overhead = _overhead_guard(g, cfg, params)
     emit("serving/claim_telemetry_overhead_le_5pct", 0.0,
@@ -169,13 +221,16 @@ def main():
                          for p in ("degree", "importance")),
         "hit_holds": all(results[p]["embedding_hit_ratio"] >= SLO_EMB_HIT
                          for p in ("degree", "importance")),
+        "replicated_p99_holds": replicated["p99_ms"] <= SLO_P99_MS,
+        "replicated_zero_dropped": replicated["dropped"] == 0,
+        "replicated_zero_torn": replicated["torn_batches"] == 0,
     }
     path = os.path.join(ROOT, "BENCH_serving.json")
     with open(path, "w") as f:
         json.dump({"requests": REQUESTS, "buckets": list(BUCKETS),
                    "fanouts": list(FANOUTS), "results": results,
-                   "staleness": staleness, "slo": slo,
-                   "telemetry_overhead": overhead},
+                   "staleness": staleness, "replicated": replicated,
+                   "slo": slo, "telemetry_overhead": overhead},
                   f, indent=2, sort_keys=True)
     emit("serving/BENCH_serving_json", 0.0,
          f"path={os.path.relpath(path, ROOT)}")
@@ -183,6 +238,9 @@ def main():
     # the SLOs are assertions, not just fields: a regression fails the bench
     assert slo["p99_holds"], f"p99 SLO violated: {results}"
     assert slo["hit_holds"], f"hit-rate SLO violated: {results}"
+    assert slo["replicated_p99_holds"], f"replicated p99: {replicated}"
+    assert slo["replicated_zero_dropped"], f"replicated drops: {replicated}"
+    assert slo["replicated_zero_torn"], f"torn batches: {replicated}"
     assert overhead["holds"], f"telemetry overhead guard: {overhead}"
 
 

@@ -28,6 +28,9 @@ EXTRA_STAGES = {
     "docs": "markdown links + public-API docstrings (scripts/check_docs.py)",
     "obs": "telemetry plane: short serve+train launcher runs with "
            "--metrics-out/--trace-out, Prometheus + JSONL validated",
+    "replicas": "elastic serving: 2-replica launcher run with one rolling "
+                "hot-swap, plus a forced autoscale scale-up, replica "
+                "telemetry validated from --metrics-out",
 }
 
 if any(a in ("-h", "--help") for a in sys.argv[1:]):
@@ -46,6 +49,7 @@ RUN_KERNELS = ONLY is None or "kernels" in ONLY
 RUN_COMM = ONLY is None or "comm" in ONLY
 RUN_DOCS = ONLY is None or "docs" in ONLY
 RUN_OBS = ONLY is None or "obs" in ONLY
+RUN_REPLICAS = ONLY is None or "replicas" in ONLY
 ARCHES = [a for a in (ONLY or ARCH_IDS) if a not in EXTRA_STAGES]
 
 
@@ -219,6 +223,55 @@ if RUN_OBS:
             assert n_ev > 0, (name, trace)
             print(f"OK {'obs_' + name:24s} series={len(parsed)} "
                   f"trace_events={n_ev}")
+
+if RUN_REPLICAS:
+    # elastic serving plane end-to-end through the launcher: a 2-replica
+    # run with one rolling hot-swap, then a 1-replica autoscale run under
+    # a burst that forces a scale-up — both validated from --metrics-out
+    import os
+    import subprocess
+    import tempfile
+
+    from repro.core.telemetry import parse_prometheus
+
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(root, "src")
+    env.pop("XLA_FLAGS", None)
+    common = ["-m", "repro.launch.serve_gnn", "--nodes", "128",
+              "--feat-dim", "8", "--hidden", "16", "--fanouts", "3", "3",
+              "--buckets", "1", "4", "8"]
+    with tempfile.TemporaryDirectory() as td:
+        # 2 replicas + one rolling hot-swap: zero drops/torn (asserted
+        # inside the router), >= 1 completed swap, both replicas visible
+        prom = os.path.join(td, "swap.prom")
+        r = subprocess.run(
+            [sys.executable, *common, "--replicas", "2", "--requests",
+             "64", "--hot-swap-every", "32", "--metrics-out", prom],
+            capture_output=True, text=True, timeout=600, env=env)
+        assert r.returncode == 0, r.stdout + r.stderr
+        parsed = parse_prometheus(open(prom).read())
+        assert parsed["serving_replicas"][()] == 2, parsed["serving_replicas"]
+        swaps = parsed["serving_hot_swaps_total"][()]
+        assert swaps >= 1, r.stdout
+        dispatch = parsed["serving_router_dispatch_total"]
+        assert len(dispatch) == 2 and sum(dispatch.values()) == 64, dispatch
+        print(f"OK {'replicas_swap':24s} replicas=2 hot_swaps={swaps:.0f}")
+
+        # autoscale: 1 replica under an 8000 req/s burst must scale up
+        prom = os.path.join(td, "scale.prom")
+        r = subprocess.run(
+            [sys.executable, *common, "--replicas", "1", "--autoscale",
+             "--max-replicas", "4", "--rate", "8000", "--requests", "192",
+             "--metrics-out", prom],
+            capture_output=True, text=True, timeout=600, env=env)
+        assert r.returncode == 0, r.stdout + r.stderr
+        parsed = parse_prometheus(open(prom).read())
+        ups = parsed["serving_scale_events_total"][(("direction", "up"),)]
+        assert ups >= 1, r.stdout
+        assert parsed["serving_replicas"][()] >= 2, parsed["serving_replicas"]
+        print(f"OK {'replicas_scale':24s} scale_ups={ups:.0f} "
+              f"replicas={parsed['serving_replicas'][()]:.0f}")
 
 if RUN_DOCS:
     # docs tier: intra-repo markdown links resolve and every exported

@@ -15,6 +15,9 @@
 #   scripts/run_tests.sh obs        # telemetry-plane tier: registry/tracer
 #                                   # units + the 2-device serve+train
 #                                   # snapshot cross-check subprocess
+#   scripts/run_tests.sh replicas   # elastic serving tier: router/autoscale/
+#                                   # hot-swap units + crash-safe checkpoint
+#                                   # resume tests
 #   scripts/run_tests.sh all        # everything
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -35,7 +38,10 @@ case "$tier" in
   obs)
     python -m pytest -q -m "not distributed" tests/test_telemetry.py "$@"
     exec python tests/telemetry_check.py ;;
+  replicas)
+    exec python -m pytest -q -m "not distributed" \
+      tests/test_replica_serving.py tests/test_checkpoint.py "$@" ;;
   all)   exec python -m pytest -q "$@" ;;
-  *) echo "usage: $0 [tier1|tier2|kernels|comm|docs|obs|all] [pytest args...]" >&2
+  *) echo "usage: $0 [tier1|tier2|kernels|comm|docs|obs|replicas|all] [pytest args...]" >&2
      exit 2 ;;
 esac

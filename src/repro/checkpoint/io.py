@@ -4,6 +4,15 @@ Layout (one directory per step):
   <dir>/step_<n>/manifest.msgpack   — tree structure + shapes/dtypes + meta
   <dir>/step_<n>/arrays.npz         — flattened leaves (host numpy)
 
+Crash safety: ``save_checkpoint`` stages both files in a ``step_<n>.tmp``
+sibling and publishes with one ``os.rename`` — a process killed mid-write
+leaves at most a ``.tmp`` directory that the step regex never matches, so
+``latest_step`` can only ever select a fully written step.  Belt and
+braces, a ``step_<n>/`` directory missing either file (e.g. produced by a
+pre-rename writer or a torn copy) is skipped by ``latest_step`` and
+rejected by ``load_checkpoint``, and the manifest's ``num_leaves`` is
+validated against the npz keys before any leaf is touched.
+
 Not a distributed checkpointer (no per-shard files) — on a real cluster one
 would swap in tensorstore/orbax; the interface is intentionally identical:
 ``save_checkpoint(dir, step, tree)`` / ``load_checkpoint(dir, step?)``.
@@ -12,11 +21,15 @@ from __future__ import annotations
 
 import os
 import re
+import shutil
 from typing import Any, Optional, Tuple
 
 import jax
 import msgpack
 import numpy as np
+
+_STEP_RE = re.compile(r"step_(\d+)$")
+_REQUIRED = ("manifest.msgpack", "arrays.npz")
 
 
 def _flatten(tree) -> Tuple[list, Any]:
@@ -24,10 +37,22 @@ def _flatten(tree) -> Tuple[list, Any]:
     return leaves, treedef
 
 
-def save_checkpoint(directory: str, step: int, tree, *, meta: dict = None
-                    ) -> str:
-    path = os.path.join(directory, f"step_{step:08d}")
-    os.makedirs(path, exist_ok=True)
+def _is_complete(path: str) -> bool:
+    """A checkpoint directory is loadable iff both files are present."""
+    return all(os.path.isfile(os.path.join(path, f)) for f in _REQUIRED)
+
+
+def save_checkpoint(directory: str, step: int, tree, *,
+                    meta: Optional[dict] = None) -> str:
+    """Write one step atomically: stage into ``step_<n>.tmp`` then publish
+    via ``os.rename`` (same filesystem, so the step directory appears all
+    at once).  Returns the final step path."""
+    final = os.path.join(directory, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    os.makedirs(directory, exist_ok=True)
+    if os.path.isdir(tmp):            # stale staging dir from a prior crash
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
     leaves, treedef = _flatten(tree)
     arrays = [np.asarray(leaf) for leaf in leaves]
     manifest = {
@@ -38,36 +63,61 @@ def save_checkpoint(directory: str, step: int, tree, *, meta: dict = None
         "step": step,
         "meta": meta or {},
     }
-    with open(os.path.join(path, "manifest.msgpack"), "wb") as f:
+    with open(os.path.join(tmp, "manifest.msgpack"), "wb") as f:
         f.write(msgpack.packb(manifest))
-    np.savez(os.path.join(path, "arrays.npz"),
+    np.savez(os.path.join(tmp, "arrays.npz"),
              **{f"leaf_{i}": a for i, a in enumerate(arrays)})
-    return path
+    if os.path.isdir(final):          # overwrite = replace atomically too
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    return final
 
 
 def latest_step(directory: str) -> Optional[int]:
+    """Newest step with BOTH files present (partial/torn dirs are not
+    candidates — resume after a kill-mid-save lands on the previous
+    step).  ``.tmp`` staging dirs never match the step pattern."""
     if not os.path.isdir(directory):
         return None
     steps = [int(m.group(1)) for d in os.listdir(directory)
-             if (m := re.match(r"step_(\d+)$", d))]
+             if (m := _STEP_RE.match(d))
+             and _is_complete(os.path.join(directory, d))]
     return max(steps) if steps else None
 
 
 def load_checkpoint(directory: str, template, step: Optional[int] = None):
-    """Restore into the structure of ``template`` (shapes must match)."""
+    """Restore into the structure of ``template`` (shapes must match).
+
+    Leaves are cast to the dtype recorded in the manifest (the dtype that
+    was saved — not the template's, which may be a differently-typed
+    scratch tree).  Raises ``FileNotFoundError`` for absent/partial steps
+    and ``ValueError`` when the manifest disagrees with the npz contents
+    or the template structure."""
     if step is None:
         step = latest_step(directory)
         if step is None:
             raise FileNotFoundError(f"no checkpoints under {directory}")
     path = os.path.join(directory, f"step_{step:08d}")
+    if not _is_complete(path):
+        raise FileNotFoundError(
+            f"checkpoint {path} is missing or partial "
+            f"(needs {' + '.join(_REQUIRED)})")
     with open(os.path.join(path, "manifest.msgpack"), "rb") as f:
         manifest = msgpack.unpackb(f.read())
     data = np.load(os.path.join(path, "arrays.npz"))
-    arrays = [data[f"leaf_{i}"] for i in range(manifest["num_leaves"])]
+    n = manifest["num_leaves"]
+    missing = [f"leaf_{i}" for i in range(n) if f"leaf_{i}" not in data.files]
+    if missing:
+        raise ValueError(
+            f"checkpoint {path} manifest declares {n} leaves but arrays.npz "
+            f"is missing {missing[:3]}{'...' if len(missing) > 3 else ''}")
+    arrays = [data[f"leaf_{i}"] for i in range(n)]
     leaves, treedef = jax.tree_util.tree_flatten(template)
     if len(leaves) != len(arrays):
         raise ValueError(
             f"checkpoint has {len(arrays)} leaves, template {len(leaves)}")
-    restored = [np.asarray(a, dtype=l.dtype).reshape(l.shape) if hasattr(
-        l, "dtype") else a for a, l in zip(arrays, leaves)]
+    restored = [
+        np.asarray(a, dtype=np.dtype(dt)).reshape(l.shape)
+        if hasattr(l, "shape") else a
+        for a, dt, l in zip(arrays, manifest["dtypes"], leaves)]
     return jax.tree_util.tree_unflatten(treedef, restored), manifest

@@ -114,6 +114,13 @@ class VersionedBuffer:
         staleness)."""
         self.version[rows] = NEVER
 
+    def invalidate_all(self) -> None:
+        """Mark the whole plane never-written — the producing model (or
+        feature epoch) changed wholesale, so every row's history is wrong
+        at any staleness (rolling weight hot-swap uses this to flip a
+        serving cache to a new params version atomically)."""
+        self.version[:] = NEVER
+
 
 class FeatureStore:
     """Global feature server + device-side cache with traffic accounting.

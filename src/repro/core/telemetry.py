@@ -163,42 +163,87 @@ class Gauge(_Metric):
 
 
 class Histogram(_Metric):
-    """Distribution metric: fixed log-spaced buckets + exact quantiles.
+    """Distribution metric: fixed log-spaced buckets + bounded-memory
+    exact-then-estimated quantiles.
 
     Bucket counts feed the Prometheus exposition (cumulative ``_bucket``
-    series with ``+Inf``); the raw samples are kept alongside so
-    :meth:`quantile` interpolates exactly like ``numpy.percentile``
-    (linear) instead of smearing within a bucket.  Samples are float32
-    and process-local — at this repo's run lengths (10²–10⁵ observations)
-    exactness is worth the few hundred KiB.
+    series with ``+Inf``) and are always exact.  Raw samples are kept
+    alongside in a *bounded reservoir* of ``max_samples`` float32 values
+    (Vitter's Algorithm R, fixed-seed rng for reproducibility): while the
+    observation count is at or below the cap, :meth:`quantile`
+    interpolates exactly like ``numpy.percentile`` (linear); past the
+    cap, every past observation has equal probability of occupying a
+    reservoir slot and :meth:`quantile` is an unbiased *estimate* over
+    that uniform subsample (``saturated`` reports which regime the
+    histogram is in).  ``sum``/``count`` and the bucket counts stay exact
+    regardless — only the raw-sample memory is bounded, fixing the
+    unbounded growth the pre-reservoir implementation had under
+    sustained serving traffic.
     """
 
     kind = "histogram"
 
+    # default raw-sample cap: 64Ki float32 = 256 KiB per series, far above
+    # this repo's test/bench run lengths (those stay exact) and a hard
+    # bound under production-length traffic
+    DEFAULT_MAX_SAMPLES = 65536
+
     def __init__(self, name: str, help: str = "",
                  buckets: Sequence[float] = DEFAULT_TIME_BUCKETS,
-                 labels=None, registry=None):
+                 labels=None, registry=None,
+                 max_samples: int = DEFAULT_MAX_SAMPLES):
         super().__init__(name, help, labels, registry)
         b = tuple(sorted(float(x) for x in buckets))
         if not b or any(x <= 0 for x in b):
             raise ValueError("buckets must be positive and non-empty")
+        if max_samples < 1:
+            raise ValueError("max_samples must be >= 1")
         self.buckets = b
         self.bucket_counts = np.zeros(len(b), np.int64)
         self.sum = 0.0
+        self.max_samples = int(max_samples)
         self._samples: List[np.ndarray] = []
+        self._n_samples = 0              # rows held across self._samples
+        self._rng = np.random.default_rng(0)
         self.count = 0
+
+    @property
+    def saturated(self) -> bool:
+        """True once the reservoir has been capped — quantiles are
+        estimates over a uniform subsample from here on."""
+        return self.count > self.max_samples
+
+    def _reservoir_insert(self, v: np.ndarray, start_t: int) -> None:
+        """Algorithm R: fold new values into the full reservoir.
+        ``start_t`` is the 1-based observation index of ``v[0]``."""
+        res = self.samples                     # consolidates to one array
+        t = start_t + np.arange(len(v))        # observation index of each
+        j = (self._rng.random(len(v)) * t).astype(np.int64)
+        keep = j < self.max_samples
+        # later duplicates of one slot overwrite earlier ones — the same
+        # outcome as processing the stream one element at a time
+        res[j[keep]] = v[keep]
+
+    def _record(self, v: np.ndarray) -> None:
+        """Shared bucket/sum/reservoir update for one batch of values."""
+        self.sum += float(v.sum())
+        idx = np.searchsorted(self.buckets, v, side="left")
+        np.add.at(self.bucket_counts, idx[idx < len(self.buckets)], 1)
+        room = self.max_samples - self._n_samples
+        head, tail = v[:room], v[room:]
+        if len(head):
+            self._samples.append(head.astype(np.float32))
+            self._n_samples += len(head)
+        if len(tail):
+            self._reservoir_insert(tail.astype(np.float32),
+                                   self.count + len(head) + 1)
+        self.count += len(v)
 
     def observe(self, value: float) -> None:
         """Record one sample; no-op while the owning registry is disabled."""
         if not self._on:
             return
-        v = float(value)
-        self.sum += v
-        self.count += 1
-        i = np.searchsorted(self.buckets, v, side="left")
-        if i < len(self.buckets):
-            self.bucket_counts[i] += 1
-        self._samples.append(np.array([v], np.float32))
+        self._record(np.array([value], np.float64))
 
     def observe_batch(self, values: np.ndarray) -> None:
         """Vectorized :meth:`observe` for per-row quantities (e.g. the
@@ -206,17 +251,14 @@ class Histogram(_Metric):
         if not self._on:
             return
         v = np.asarray(values, np.float64).ravel()
-        if not len(v):
-            return
-        self.sum += float(v.sum())
-        self.count += len(v)
-        idx = np.searchsorted(self.buckets, v, side="left")
-        np.add.at(self.bucket_counts, idx[idx < len(self.buckets)], 1)
-        self._samples.append(v.astype(np.float32))
+        if len(v):
+            self._record(v)
 
     @property
     def samples(self) -> np.ndarray:
-        """All recorded samples (float32, observation order)."""
+        """The retained raw samples (float32).  Below the reservoir cap
+        this is every observation in observation order; above it, a
+        uniform ``max_samples``-sized subsample of the stream."""
         if not self._samples:
             return np.zeros(0, np.float32)
         if len(self._samples) > 1:
@@ -224,8 +266,9 @@ class Histogram(_Metric):
         return self._samples[0]
 
     def quantile(self, q: float) -> float:
-        """Exact ``q``-quantile of the recorded samples (numpy linear
-        interpolation; 0.0 when empty)."""
+        """``q``-quantile of the retained samples (numpy linear
+        interpolation; 0.0 when empty).  Exact until the reservoir
+        saturates (``count > max_samples``), an unbiased estimate after."""
         s = self.samples
         return float(np.quantile(s, q)) if len(s) else 0.0
 
@@ -238,11 +281,13 @@ class Histogram(_Metric):
         return out
 
     def reset(self) -> None:
-        """Drop all samples and bucket counts."""
+        """Drop all samples and bucket counts (the reservoir cap and rng
+        state survive — a reset histogram starts a fresh exact regime)."""
         self.bucket_counts[:] = 0
         self.sum = 0.0
         self.count = 0
         self._samples = []
+        self._n_samples = 0
 
 
 class SpanError(RuntimeError):
@@ -383,10 +428,12 @@ class MetricsRegistry:
 
     def histogram(self, name: str, help: str = "",
                   buckets: Sequence[float] = DEFAULT_TIME_BUCKETS,
+                  max_samples: int = Histogram.DEFAULT_MAX_SAMPLES,
                   **labels) -> Histogram:
         """Get-or-create the :class:`Histogram` for ``(name, labels)``
-        (``buckets`` applies only on first creation)."""
-        return self._get(Histogram, name, help, labels, buckets=buckets)
+        (``buckets``/``max_samples`` apply only on first creation)."""
+        return self._get(Histogram, name, help, labels, buckets=buckets,
+                         max_samples=max_samples)
 
     def span(self, name: str, clock=None, **attrs):
         """Shorthand for ``registry.tracer.span(...)``."""

@@ -10,6 +10,16 @@ baseline, then the layered cache) and reports the traffic saved.
       --requests 256 --arch sage
   PYTHONPATH=src python -m repro.launch.serve_gnn --dataset reddit-like \
       --requests 512 --cache degree --staleness 2
+
+Replicated mode (``--replicas N`` or ``--autoscale``) serves through the
+elastic :class:`repro.serving.router.ReplicaRouter` instead: Zipf traffic
+spread over N replicas, optional queue-depth/p99 autoscaling, and rolling
+weight hot-swap every K completions with per-response version tags::
+
+  PYTHONPATH=src python -m repro.launch.serve_gnn --replicas 2 \
+      --hot-swap-every 100 --requests 256
+  PYTHONPATH=src python -m repro.launch.serve_gnn --replicas 1 --autoscale \
+      --rate 8000 --requests 512 --router-policy least_queue
 """
 from __future__ import annotations
 
@@ -48,6 +58,30 @@ def parse_args(argv=None):
                          "and cache-fill payloads; fp32 is bit-exact")
     ap.add_argument("--use-kernel", action="store_true",
                     help="Pallas segment-sum for the Gather step")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="initial replica count; > 1 (or --autoscale) "
+                         "serves through the elastic ReplicaRouter")
+    ap.add_argument("--router-policy", default="least_queue",
+                    choices=["round_robin", "least_queue"],
+                    help="request dispatch policy across replicas")
+    ap.add_argument("--private-cache", action="store_true",
+                    help="one EmbeddingCache per replica instead of the "
+                         "default fleet-shared cache")
+    ap.add_argument("--autoscale", action="store_true",
+                    help="enable the queue-depth/p99 autoscaling "
+                         "controller (KEDA-style; scales replicas "
+                         "within [--replicas, --max-replicas])")
+    ap.add_argument("--max-replicas", type=int, default=8,
+                    help="autoscaler upper bound on the fleet size")
+    ap.add_argument("--hot-swap-every", type=int, default=0,
+                    help="stage a rolling weight hot-swap every K "
+                         "completions (0 = never); new weights are a "
+                         "fresh init per version, every response is "
+                         "tagged with the one version that served it")
+    ap.add_argument("--ckpt-dir", default="",
+                    help="write a crash-safe (params, version) "
+                         "checkpoint here after the run; if it already "
+                         "holds a complete step, resume weights from it")
     ap.add_argument("--train-epochs", type=int, default=0,
                     help="optionally pre-train the model full-graph")
     ap.add_argument("--metrics-out", default="",
@@ -130,6 +164,9 @@ def run(args):
                                 args.rate, seed=args.seed + 1)
     capacity = int(g.num_nodes * args.cache_frac)
 
+    if args.replicas > 1 or args.autoscale:
+        return _run_replicated(args, g, cfg, params, workload, capacity)
+
     def serve(policy: str) -> dict:
         srv = GNNInferenceServer(
             g, cfg, params, fanouts=args.fanouts, buckets=args.buckets,
@@ -165,6 +202,73 @@ def run(args):
     print(f"bytes saved vs no-cache: {saved / 2**20:.2f} MiB "
           f"({saved / max(base['feature_bytes'], 1):.1%})")
     return res
+
+
+def _run_replicated(args, g, cfg, params, workload, capacity):
+    """Serve through the elastic ReplicaRouter: N replicas, optional
+    autoscaling, rolling hot-swap every K completions, crash-safe
+    stop/resume via ``--ckpt-dir``."""
+    import jax
+
+    from repro.checkpoint import latest_step
+    from repro.models.gnn import model as GM
+    from repro.serving import AutoscalePolicy, ReplicaRouter, restore_params
+
+    router = ReplicaRouter(
+        g, cfg, params,
+        n_replicas=args.replicas,
+        policy=args.router_policy,
+        shared_cache=not args.private_cache,
+        cache_policy=args.cache,
+        cache_capacity=capacity,
+        max_staleness=args.staleness,
+        fanouts=args.fanouts,
+        buckets=args.buckets,
+        max_wait_s=args.max_wait_ms / 1e3,
+        seed=args.seed,
+        autoscale=AutoscalePolicy(
+            min_replicas=args.replicas,
+            max_replicas=args.max_replicas) if args.autoscale else None)
+
+    if args.ckpt_dir and latest_step(args.ckpt_dir) is not None:
+        resumed, version = restore_params(args.ckpt_dir, params)
+        print(f"resumed weights from {args.ckpt_dir} "
+              f"(params version {version})")
+        if version > 0:
+            router.hot_swap(resumed, version=version)
+        else:
+            router.params = resumed
+            for rep in router.replicas:
+                rep.server.params = resumed
+
+    def fresh_params(version: int):
+        return GM.init_gnn(cfg, jax.random.PRNGKey(args.seed + version))
+
+    stats = router.run(workload,
+                       hot_swap_every=args.hot_swap_every,
+                       new_params_fn=(fresh_params
+                                      if args.hot_swap_every else None))
+    out = router.summary()
+    mode = "autoscale" if args.autoscale else "fixed"
+    print(f"[replicated] {args.router_policy}/{mode}  "
+          f"{out['throughput_rps']:8.1f} req/s  "
+          f"p50 {out['p50_ms']:6.2f} ms  p99 {out['p99_ms']:6.2f} ms")
+    print(f"served {out['served']}  dropped {out['dropped']}  "
+          f"torn batches {out['torn_batches']}  "
+          f"hot swaps {out['hot_swaps']}  "
+          f"replicas peak {stats.replicas_peak} "
+          f"final {stats.replicas_final}  "
+          f"scale events {out['scale_events']}")
+    print(f"version counts {out['version_counts']}  "
+          f"serving version {out['params_version']}")
+    if "embedding_hit_ratio" in out:
+        kind = "shared" if out["shared_cache"] else "private"
+        print(f"{kind} cache hit rate {out['embedding_hit_ratio']:.2%}  "
+              f"wire {out['wire_bytes'] / 2**20:.2f} MiB")
+    if args.ckpt_dir:
+        path = router.save(args.ckpt_dir)
+        print(f"checkpoint -> {path}")
+    return out
 
 
 if __name__ == "__main__":

@@ -16,16 +16,26 @@ server:
   :class:`repro.core.caching.FeatureStore`.
 * :mod:`repro.serving.server`   — the serve loop: admit → batch → sample
   → fetch/cache → forward → account latency.
+* :mod:`repro.serving.replica`  — one replica: private queue + batcher +
+  compute path, scheduled by the router.
+* :mod:`repro.serving.router`   — the elastic replicated tier: dispatch
+  policies, load-based autoscaling, rolling weight hot-swap under the
+  shared version clock, crash-safe stop/resume.
 """
 from repro.serving.batcher import BucketedBatcher, MicroBatch
 from repro.serving.cache import EmbeddingCache
+from repro.serving.replica import ServingReplica
 from repro.serving.request import (InferenceRequest, RequestQueue,
                                    poisson_workload)
+from repro.serving.router import (AutoscalePolicy, AutoScaler,
+                                  ReplicaRouter, RouterStats,
+                                  restore_params)
 from repro.serving.sampler import ServingSampler
 from repro.serving.server import GNNInferenceServer, ServeStats
 
 __all__ = [
     "BucketedBatcher", "MicroBatch", "EmbeddingCache", "InferenceRequest",
     "RequestQueue", "poisson_workload", "ServingSampler",
-    "GNNInferenceServer", "ServeStats",
+    "GNNInferenceServer", "ServeStats", "ServingReplica", "AutoscalePolicy",
+    "AutoScaler", "ReplicaRouter", "RouterStats", "restore_params",
 ]

@@ -103,6 +103,12 @@ class EmbeddingCache:
             path="serving.features")
         self.hits = 0
         self.misses = 0
+        # model-weight version whose outputs the planes currently hold.
+        # Readers on a different params version must treat the cache as
+        # cold (see GNNInferenceServer.serve_batch) — mixing embeddings
+        # produced by two weight versions inside one batch is the
+        # "version-torn" hazard rolling hot-swap exists to prevent.
+        self.params_version = 0
         self._m_hits = telemetry.counter(
             "cache_lookups_total", cache="serving.embedding", result="hit")
         self._m_misses = telemetry.counter(
@@ -112,6 +118,24 @@ class EmbeddingCache:
     def clock(self) -> int:
         """Current value of the shared version clock."""
         return self.vclock.now
+
+    def bump_params_version(self, version: int) -> None:
+        """Atomically flip the cache to a new model-weight version: every
+        plane is invalidated wholesale (embeddings computed under the old
+        weights are wrong at any staleness) and the version clock ticks
+        once, all before ``params_version`` is published — so no reader
+        can ever pair new-version freshness with old-version rows.
+        Idempotent per version; rejects going backwards."""
+        if version == self.params_version:
+            return
+        if version < self.params_version:
+            raise ValueError(
+                f"params version must be monotone: have "
+                f"{self.params_version}, got {version}")
+        for plane in self.planes.values():
+            plane.invalidate_all()
+        self.vclock.tick()
+        self.params_version = version
 
     # -- embedding plane ---------------------------------------------------
     def lookup(self, layer: int, ids: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:

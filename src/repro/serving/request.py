@@ -16,12 +16,16 @@ import numpy as np
 
 @dataclasses.dataclass
 class InferenceRequest:
-    """One per-node prediction request."""
+    """One per-node prediction request.  ``params_version`` is stamped at
+    completion with the single weight version that computed the response
+    (-1 = not yet served) — the end-to-end consistency tag the rolling
+    hot-swap tests assert on."""
     req_id: int
     node_id: int
     arrival_s: float
     done_s: float = -1.0
     logits: Optional[np.ndarray] = None
+    params_version: int = -1
 
     @property
     def latency_s(self) -> float:

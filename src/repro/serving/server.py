@@ -20,6 +20,7 @@ p50/p99 include queueing delay and the run is reproducible.
 from __future__ import annotations
 
 import dataclasses
+import math
 import time
 from typing import List, Optional, Sequence
 
@@ -63,17 +64,25 @@ class ServeStats:
 
     @property
     def throughput_rps(self) -> float:
-        return self.served / self.wall_s if self.wall_s > 0 else 0.0
+        """Served requests per second of elapsed time; 0.0 (never NaN/inf,
+        never a raise) when no time has elapsed — a zero-elapsed run with
+        served requests is degenerate, not infinitely fast."""
+        if not (self.wall_s > 0.0) or not math.isfinite(self.wall_s):
+            return 0.0
+        return self.served / self.wall_s
 
     @property
     def latencies_s(self) -> List[float]:
-        """Recorded per-request latencies in observation order."""
+        """Recorded per-request latencies in observation order (a uniform
+        subsample once the histogram's reservoir saturates)."""
         return [float(v) for v in self.latency_hist.samples]
 
     def latency_quantile(self, q: float) -> float:
-        """Exact latency quantile (numpy-style interpolation, via the
-        shared telemetry histogram)."""
-        return self.latency_hist.quantile(q)
+        """Latency quantile (numpy-style interpolation, via the shared
+        telemetry histogram); 0.0 on an empty histogram — an unserved
+        stats object reports zero latency, it does not raise."""
+        v = self.latency_hist.quantile(q)
+        return v if math.isfinite(v) else 0.0
 
     def summary(self) -> dict:
         return {
@@ -101,8 +110,16 @@ class GNNInferenceServer:
         cache_policy / cache_capacity / max_staleness: admission policy,
             budget, and staleness bound of the historical-embedding
             :class:`EmbeddingCache` (``"none"`` disables write-back).
+        cache: inject an externally owned :class:`EmbeddingCache` instead
+            of building a private one — the replicated serving tier's
+            *shared-cache* mode, where N replicas read and fill one
+            cache (``cache_policy``/``cache_capacity`` are then ignored).
         max_wait_s: head-of-line batching deadline.
         seed: sampling determinism base.
+        params_version: integer weight version served; :meth:`swap_params`
+            flips ``(params, params_version)`` atomically between batches
+            and the cache is only consulted while its ``params_version``
+            matches — one batch can never mix two weight versions.
 
     :meth:`run` serves a workload under a virtual clock (arrival stamps +
     measured compute), so p50/p99 include queueing delay and runs are
@@ -115,8 +132,11 @@ class GNNInferenceServer:
                  cache_policy: str = "degree",
                  cache_capacity: Optional[int] = None,
                  max_staleness: int = 0,
+                 cache: Optional[EmbeddingCache] = None,
                  max_wait_s: float = 0.002,
-                 seed: int = 0):
+                 seed: int = 0,
+                 params_version: int = 0,
+                 forward_fn=None):
         if cfg.arch == "appnp":
             raise ValueError("appnp serves full-graph; use a sampled arch")
         if len(fanouts) != cfg.num_layers:
@@ -127,17 +147,30 @@ class GNNInferenceServer:
         self.g = g
         self.cfg = cfg
         self.params = params
+        self.params_version = params_version
         self.sampler = ServingSampler(g, fanouts, seed=seed)
         self.batcher = BucketedBatcher(buckets, max_wait_s=max_wait_s)
-        self.use_cache = cache_policy != "none"
         # one cached plane: the (post-relu) hidden state entering the
         # final layer — dimension ``hidden`` for every arch in the zoo.
         # cfg.wire_codec selects the communication-plane wire format for
         # feature pulls AND cache fills (fp32 = bit-exact default).
-        self.cache = EmbeddingCache(
-            g, [cfg.hidden], policy=cache_policy, capacity=cache_capacity,
-            max_staleness=max_staleness, codec=cfg.wire_codec)
-        self._forward = jax.jit(
+        if cache is not None:
+            if cache.planes[0].values.shape[1] != cfg.hidden:
+                raise ValueError("injected cache plane width != cfg.hidden")
+            self.use_cache = True
+            self.owns_cache = False
+            self.cache = cache
+        else:
+            self.use_cache = cache_policy != "none"
+            self.owns_cache = True
+            self.cache = EmbeddingCache(
+                g, [cfg.hidden], policy=cache_policy,
+                capacity=cache_capacity, max_staleness=max_staleness,
+                codec=cfg.wire_codec)
+            self.cache.params_version = params_version
+        # replicas of one deployment share a single jitted forward
+        # (forward_fn=) so N replicas compile each bucket once, not N times
+        self._forward = forward_fn if forward_fn is not None else jax.jit(
             lambda p, inner, outer, x, ch, fm: GM.forward_blocks_cached(
                 cfg, p, inner, outer, x, ch, fm))
         self.stats = ServeStats()
@@ -166,15 +199,43 @@ class GNNInferenceServer:
         run-loop virtual time plus wall progress since its anchor."""
         return self._vnow + (time.perf_counter() - self._vanchor)
 
+    def swap_params(self, params, version: int) -> None:
+        """Atomically flip this server to new weights.  Called only
+        between batches (the replica router guarantees the replica is
+        idle), so every batch — including ones whose requests were queued
+        before the flip — is computed end-to-end under exactly one
+        ``(params, params_version, cache state)``.  A privately owned
+        cache is flipped in the same breath; a shared cache is flipped
+        once by whoever owns the rollout (see ``ReplicaRouter``)."""
+        if version < self.params_version:
+            raise ValueError(
+                f"params version must be monotone: have "
+                f"{self.params_version}, got {version}")
+        self.params = params
+        self.params_version = version
+        if self.owns_cache:
+            self.cache.bump_params_version(version)
+
     # -- one micro-batch ---------------------------------------------------
     def serve_batch(self, mb: MicroBatch) -> np.ndarray:
         """Returns (bucket, num_classes) logits (padded slots garbage)."""
         vclock = self._virtual_now
+        # the cache is readable only while it holds THIS weight version's
+        # embeddings — mid-rollout, a replica still on the old weights
+        # sees a flipped shared cache as cold (and must not fill it, or a
+        # new-version replica would read old-version rows: a torn batch)
+        cache_ok = (self.use_cache
+                    and self.cache.params_version == self.params_version)
         with telemetry.span("serve.batch", clock=vclock, bucket=mb.bucket):
             with telemetry.span("serve.sample", clock=vclock):
                 outer_b = self.sampler.sample_outer(mb.node_ids)
                 ids1 = outer_b.src_nodes
-                cached_h, fresh = self.cache.lookup(0, ids1)
+                if cache_ok:
+                    cached_h, fresh = self.cache.lookup(0, ids1)
+                else:
+                    cached_h = np.zeros((len(ids1), self.cfg.hidden),
+                                        np.float32)
+                    fresh = np.zeros(len(ids1), bool)
                 miss = (ids1 >= 0) & ~fresh
                 inner_bs = self.sampler.sample_inner(ids1, expand=miss)
                 need = needed_feature_mask(inner_bs, miss)
@@ -193,12 +254,16 @@ class GNNInferenceServer:
                     self.params, inner_dev, outer_dev, jnp.asarray(x_in),
                     jnp.asarray(cached_h), jnp.asarray(fresh))
                 logits = np.asarray(logits)
-            if self.use_cache:
+            if cache_ok:
                 self.cache.store(0, ids1, np.asarray(h_fresh), miss)
         return logits
 
-    def warmup(self, node_id: int = 0) -> None:
-        """Compile every declared bucket once (excluded from stats)."""
+    def warmup(self, node_id: int = 0, *,
+               reset_cache_stats: bool = True) -> None:
+        """Compile every declared bucket once (excluded from stats).
+        ``reset_cache_stats=False`` keeps the cache counters — replicas
+        warmed mid-run against a *shared* cache must not wipe the
+        fleet's accumulated accounting."""
         for b in self.batcher.buckets:
             ids = np.full((b,), -1, np.int64)
             ids[0] = node_id
@@ -206,7 +271,8 @@ class GNNInferenceServer:
         # warmup traffic must not pollute serving stats: the caches own
         # their counters (and the matching telemetry series), so reset
         # through them instead of poking their attributes
-        self.cache.reset_stats()
+        if reset_cache_stats:
+            self.cache.reset_stats()
 
     # -- the serve loop ----------------------------------------------------
     def run(self, workload: List[InferenceRequest], *,
@@ -259,6 +325,7 @@ class GNNInferenceServer:
             for j, r in enumerate(mb.requests):
                 r.logits = logits[mb.slots[j]]
                 r.done_s = vnow
+                r.params_version = self.params_version
                 self.stats.latency_hist.observe(r.latency_s)
                 self._m_latency.observe(r.latency_s)
             self._m_served.inc(len(mb.requests))

@@ -1,0 +1,145 @@
+"""Crash-safe checkpoint invariants: a kill at ANY point during save can
+never corrupt resume — ``latest_step`` only ever selects a fully written
+step, partial directories are skipped and rejected, and the manifest is
+validated against the npz payload before any leaf is restored."""
+import os
+
+import numpy as np
+import pytest
+
+from repro.checkpoint import latest_step, load_checkpoint, save_checkpoint
+
+
+def _tree(seed: int):
+    rng = np.random.default_rng(seed)
+    return {
+        "w": rng.normal(size=(4, 3)).astype(np.float32),
+        "b": rng.normal(size=(3,)).astype(np.float32),
+        "inner": {"scale": np.asarray(float(seed), np.float64)},
+    }
+
+
+def _assert_tree_equal(a, b):
+    assert np.allclose(a["w"], b["w"])
+    assert np.allclose(a["b"], b["b"])
+    assert np.allclose(a["inner"]["scale"], b["inner"]["scale"])
+
+
+# ---------------------------------------------------------------------------
+# happy path: roundtrip, meta, dtype restoration
+# ---------------------------------------------------------------------------
+
+def test_roundtrip_with_meta(tmp_path):
+    t = _tree(0)
+    path = save_checkpoint(str(tmp_path), 3, t,
+                           meta={"params_version": 3, "note": "x"})
+    assert path.endswith("step_00000003")
+    assert latest_step(str(tmp_path)) == 3
+    restored, manifest = load_checkpoint(str(tmp_path), _tree(99))
+    _assert_tree_equal(restored, t)
+    assert manifest["meta"] == {"params_version": 3, "note": "x"}
+    assert manifest["step"] == 3
+
+
+def test_restore_casts_to_saved_dtype(tmp_path):
+    """The manifest dtype (what was saved) wins over the template's."""
+    t = _tree(1)
+    save_checkpoint(str(tmp_path), 0, t)
+    template = {"w": np.zeros((4, 3), np.float16),
+                "b": np.zeros((3,), np.float16),
+                "inner": {"scale": np.asarray(0, np.int32)}}
+    restored, _ = load_checkpoint(str(tmp_path), template)
+    assert restored["w"].dtype == np.float32
+    assert restored["inner"]["scale"].dtype == np.float64
+    _assert_tree_equal(restored, t)
+
+
+def test_overwrite_same_step_is_atomic(tmp_path):
+    save_checkpoint(str(tmp_path), 1, _tree(0))
+    t2 = _tree(7)
+    save_checkpoint(str(tmp_path), 1, t2)
+    restored, _ = load_checkpoint(str(tmp_path), _tree(99))
+    _assert_tree_equal(restored, t2)
+    assert latest_step(str(tmp_path)) == 1
+
+
+# ---------------------------------------------------------------------------
+# kill mid-save: the partial step is invisible, resume uses the previous
+# ---------------------------------------------------------------------------
+
+def test_kill_mid_save_resumes_previous_step(tmp_path, monkeypatch):
+    """Simulate a crash between manifest and npz writes: the .tmp staging
+    dir remains, step_2 is never published, and resume lands on step 1."""
+    good = _tree(0)
+    save_checkpoint(str(tmp_path), 1, good)
+
+    real_savez = np.savez
+
+    def crash_savez(*a, **k):
+        raise KeyboardInterrupt("killed mid-save")
+
+    monkeypatch.setattr(np, "savez", crash_savez)
+    with pytest.raises(KeyboardInterrupt):
+        save_checkpoint(str(tmp_path), 2, _tree(1))
+    monkeypatch.setattr(np, "savez", real_savez)
+
+    # the torn step was never published: only the .tmp staging dir exists
+    assert not os.path.isdir(tmp_path / "step_00000002")
+    assert os.path.isdir(tmp_path / "step_00000002.tmp")
+    assert latest_step(str(tmp_path)) == 1
+    restored, manifest = load_checkpoint(str(tmp_path), _tree(99))
+    _assert_tree_equal(restored, good)
+    assert manifest["step"] == 1
+
+    # a retry after the crash reuses (and replaces) the stale staging dir
+    t2 = _tree(2)
+    save_checkpoint(str(tmp_path), 2, t2)
+    assert latest_step(str(tmp_path)) == 2
+    restored, _ = load_checkpoint(str(tmp_path), _tree(99))
+    _assert_tree_equal(restored, t2)
+
+
+def test_partial_dir_skipped_and_rejected(tmp_path):
+    """A pre-rename-style torn step (one file missing) is skipped by
+    latest_step and rejected by an explicit load."""
+    save_checkpoint(str(tmp_path), 1, _tree(0))
+    save_checkpoint(str(tmp_path), 5, _tree(1))
+    os.remove(tmp_path / "step_00000005" / "arrays.npz")
+    assert latest_step(str(tmp_path)) == 1
+    with pytest.raises(FileNotFoundError, match="partial"):
+        load_checkpoint(str(tmp_path), _tree(99), step=5)
+    restored, _ = load_checkpoint(str(tmp_path), _tree(99))
+    _assert_tree_equal(restored, _tree(0))
+
+
+def test_empty_and_missing_dirs(tmp_path):
+    assert latest_step(str(tmp_path)) is None
+    assert latest_step(str(tmp_path / "nope")) is None
+    with pytest.raises(FileNotFoundError):
+        load_checkpoint(str(tmp_path), _tree(0))
+
+
+# ---------------------------------------------------------------------------
+# manifest validation
+# ---------------------------------------------------------------------------
+
+def test_manifest_npz_key_mismatch_rejected(tmp_path):
+    """A manifest declaring more leaves than the npz holds (torn copy)
+    fails loudly before any leaf is restored."""
+    import msgpack
+
+    save_checkpoint(str(tmp_path), 0, _tree(0))
+    mpath = tmp_path / "step_00000000" / "manifest.msgpack"
+    manifest = msgpack.unpackb(mpath.read_bytes())
+    manifest["num_leaves"] += 1
+    manifest["shapes"].append([2])
+    manifest["dtypes"].append("float32")
+    mpath.write_bytes(msgpack.packb(manifest))
+    with pytest.raises(ValueError, match="missing"):
+        load_checkpoint(str(tmp_path), _tree(0))
+
+
+def test_template_leaf_count_mismatch_rejected(tmp_path):
+    save_checkpoint(str(tmp_path), 0, _tree(0))
+    with pytest.raises(ValueError, match="leaves"):
+        load_checkpoint(str(tmp_path), {"only": np.zeros((4, 3), np.float32)})

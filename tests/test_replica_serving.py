@@ -1,0 +1,265 @@
+"""Elastic replicated-serving invariants: zero drops, zero version-torn
+batches under a rolling hot-swap, autoscaler behavior, dispatch policies,
+and crash-safe stop/resume through the checkpoint plane."""
+import jax
+import numpy as np
+import pytest
+
+from repro.models.gnn import model as GM
+from repro.models.gnn.model import GNNConfig
+from repro.serving import (AutoscalePolicy, AutoScaler, ReplicaRouter,
+                           RouterStats, ServeStats, poisson_workload,
+                           restore_params)
+
+BUCKETS = (1, 4, 8)
+FANOUTS = (3, 3)
+
+
+@pytest.fixture(scope="module")
+def graph(graph):
+    return graph("sbm", 200)
+
+
+@pytest.fixture(scope="module")
+def model(graph):
+    cfg = GNNConfig(arch="sage", feat_dim=16, hidden=32,
+                    num_classes=graph.num_classes)
+    params = GM.init_gnn(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _router(graph, model, **kw):
+    cfg, params = model
+    kw.setdefault("n_replicas", 2)
+    kw.setdefault("fanouts", FANOUTS)
+    kw.setdefault("buckets", BUCKETS)
+    kw.setdefault("cache_policy", "degree")
+    kw.setdefault("cache_capacity", graph.num_nodes)
+    kw.setdefault("seed", 0)
+    return ReplicaRouter(graph, cfg, params, **kw)
+
+
+def _workload(graph, n, rate=4000.0, seed=1):
+    return poisson_workload(n, np.arange(graph.num_nodes), rate, seed=seed)
+
+
+# ---------------------------------------------------------------------------
+# basics: completion, zero drops, per-replica accounting
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("policy", ["round_robin", "least_queue"])
+def test_all_requests_served_no_drops(graph, model, policy):
+    router = _router(graph, model, policy=policy)
+    wl = _workload(graph, 48)
+    stats = router.run(wl)
+    assert stats.served == 48
+    assert stats.dropped == 0
+    assert sum(r.served for r in router.replicas) == 48
+    # every request carries logits and a version stamp
+    for r in wl:
+        assert r.logits is not None
+        assert r.params_version == 0
+        assert r.done_s >= r.arrival_s
+
+
+def test_round_robin_spreads_traffic(graph, model):
+    router = _router(graph, model, policy="round_robin", n_replicas=2)
+    router.run(_workload(graph, 40))
+    served = sorted(r.served for r in router.replicas)
+    # alternating dispatch: both replicas carry work (not all-on-one)
+    assert served[0] >= 10, served
+
+
+def test_bad_config_rejected(graph, model):
+    with pytest.raises(ValueError, match="policy"):
+        _router(graph, model, policy="fastest")
+    with pytest.raises(ValueError, match="replica"):
+        _router(graph, model, n_replicas=0)
+
+
+# ---------------------------------------------------------------------------
+# rolling hot-swap: zero torn batches, one version per response
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shared_cache", [True, False])
+def test_rolling_hot_swap_zero_torn(graph, model, shared_cache):
+    cfg, _ = model
+    router = _router(graph, model, shared_cache=shared_cache)
+
+    def fresh(version):
+        return GM.init_gnn(cfg, jax.random.PRNGKey(100 + version))
+
+    wl = _workload(graph, 96)
+    stats = router.run(wl, hot_swap_every=30, new_params_fn=fresh)
+    assert stats.served == 96 and stats.dropped == 0
+    assert stats.torn_batches == 0
+    assert stats.hot_swaps >= 1
+    assert router.version == stats.hot_swaps
+    # every response is tagged with exactly one of the served versions,
+    # and the version counts partition the workload
+    versions = {r.params_version for r in wl}
+    assert versions <= set(range(router.version + 1))
+    assert len(versions) >= 2, "swap must happen mid-stream"
+    assert sum(stats.version_counts.values()) == 96
+    for r in wl:
+        assert stats.version_counts[r.params_version] > 0
+
+
+def test_hot_swap_staged_then_applied_between_runs(graph, model):
+    cfg, params = model
+    router = _router(graph, model)
+    new = GM.init_gnn(cfg, jax.random.PRNGKey(42))
+    v = router.hot_swap(new)
+    assert v == 1
+    with pytest.raises(RuntimeError, match="in flight"):
+        router.hot_swap(new)
+    stats = router.run(_workload(graph, 16))
+    assert router.version == 1
+    assert all(r.version == 1 for r in router.replicas)
+    assert stats.torn_batches == 0
+
+
+def test_hot_swap_version_must_grow(graph, model):
+    cfg, _ = model
+    router = _router(graph, model)
+    with pytest.raises(ValueError, match="grow"):
+        router.hot_swap(GM.init_gnn(cfg, jax.random.PRNGKey(1)), version=0)
+
+
+def test_shared_cache_flips_with_first_replica(graph, model):
+    """After a rollout, the shared cache serves the new version only —
+    its params_version matches the router's and no replica disagrees."""
+    cfg, _ = model
+    router = _router(graph, model, shared_cache=True)
+    router.run(_workload(graph, 64), hot_swap_every=32,
+               new_params_fn=lambda v: GM.init_gnn(
+                   cfg, jax.random.PRNGKey(v)))
+    assert router.shared_cache.params_version == router.version
+    assert all(r.version == router.version for r in router.replicas)
+
+
+# ---------------------------------------------------------------------------
+# autoscaler
+# ---------------------------------------------------------------------------
+
+def test_autoscaler_scales_up_on_queue_depth():
+    sc = AutoScaler(AutoscalePolicy(max_replicas=4,
+                                    target_queue_per_replica=4.0))
+    assert sc.decide(1.0, [10, 10], 2) == 1         # 10 qpr > 4
+    assert sc.decide(1.01, [10, 10], 3) == 0        # cooldown
+    assert sc.decide(2.0, [10, 10, 10], 3) == 1
+    assert sc.events[0]["action"] == "up"
+
+
+def test_autoscaler_respects_max_and_scales_down():
+    p = AutoscalePolicy(min_replicas=1, max_replicas=2,
+                        target_queue_per_replica=4.0,
+                        low_queue_per_replica=1.0, scale_down_after=2,
+                        cooldown_s=0.0)
+    sc = AutoScaler(p)
+    assert sc.decide(1.0, [100, 100], 2) == 0       # at max: no scale-up
+    assert sc.decide(2.0, [0, 0], 2) == 0           # low check 1
+    assert sc.decide(3.0, [0, 0], 2) == -1          # low check 2 -> down
+    assert sc.decide(4.0, [0], 1) == 0              # at min: stays
+    assert [e["action"] for e in sc.events] == ["down"]
+
+
+def test_autoscaler_p99_slo_trigger():
+    sc = AutoScaler(AutoscalePolicy(slo_p99_s=0.010,
+                                    target_queue_per_replica=1e9))
+    for _ in range(32):
+        sc.observe_latency(0.050)
+    assert sc.recent_p99() > 0.010
+    assert sc.decide(1.0, [0], 1) == 1              # p99 breach, not queue
+
+
+def test_router_scales_up_under_burst(graph, model):
+    router = _router(graph, model, n_replicas=1,
+                     autoscale=AutoscalePolicy(
+                         min_replicas=1, max_replicas=4,
+                         target_queue_per_replica=4.0,
+                         check_every_s=0.002, cooldown_s=0.004))
+    stats = router.run(_workload(graph, 96, rate=12000.0))
+    assert stats.served == 96 and stats.dropped == 0
+    assert stats.replicas_peak >= 2, stats.summary()
+    assert any(e["action"] == "up" for e in stats.scale_events)
+    # scale-up decisions were driven by observed queue depth
+    up = next(e for e in stats.scale_events if e["action"] == "up")
+    assert up["queue_per_replica"] > 4.0
+
+
+def test_router_drains_on_scale_down(graph, model):
+    """A forced drain serves its queue dry before removal — no drops."""
+    router = _router(graph, model, n_replicas=3)
+    wl = _workload(graph, 48)
+    # mark one replica draining before the run: it must still finish any
+    # work the dispatcher can no longer send it (its queue starts empty,
+    # so it should be reaped)
+    router.replicas[2].draining = True
+    stats = router.run(wl)
+    assert stats.served == 48 and stats.dropped == 0
+    assert len(router.replicas) == 2
+
+
+# ---------------------------------------------------------------------------
+# stop/resume through the checkpoint plane
+# ---------------------------------------------------------------------------
+
+def test_save_restore_roundtrip(graph, model, tmp_path):
+    cfg, params = model
+    router = _router(graph, model)
+    router.run(_workload(graph, 32), hot_swap_every=16,
+               new_params_fn=lambda v: GM.init_gnn(
+                   cfg, jax.random.PRNGKey(v)))
+    assert router.version >= 1
+    router.save(str(tmp_path))
+    restored, version = restore_params(str(tmp_path), params)
+    assert version == router.version
+    for a, b in zip(jax.tree_util.tree_leaves(restored),
+                    jax.tree_util.tree_leaves(router.params)):
+        assert np.allclose(np.asarray(a), np.asarray(b))
+
+
+def test_resume_serves_restored_version(graph, model, tmp_path):
+    cfg, params = model
+    saver = _router(graph, model, n_replicas=1)
+    saver.run(_workload(graph, 24), hot_swap_every=12,
+              new_params_fn=lambda v: GM.init_gnn(
+                  cfg, jax.random.PRNGKey(v)))
+    saver.save(str(tmp_path))
+    restored, version = restore_params(str(tmp_path), params)
+
+    fresh = _router(graph, model, n_replicas=2)
+    fresh.hot_swap(restored, version=version)
+    wl = _workload(graph, 24, seed=5)
+    stats = fresh.run(wl)
+    assert fresh.version == version
+    assert stats.torn_batches == 0
+    # the tail of the stream is served on the restored version
+    assert wl[-1].params_version == version
+
+
+# ---------------------------------------------------------------------------
+# stats hardening (satellite: no NaNs out of empty/zero-elapsed stats)
+# ---------------------------------------------------------------------------
+
+def test_serve_stats_empty_and_zero_elapsed():
+    s = ServeStats()
+    assert s.throughput_rps == 0.0
+    assert s.latency_quantile(0.5) == 0.0
+    out = s.summary()
+    assert out["p50_ms"] == 0.0 and out["p99_ms"] == 0.0
+    assert out["throughput_rps"] == 0.0
+    s.served = 10
+    s.wall_s = 0.0
+    assert s.throughput_rps == 0.0
+    s.wall_s = float("inf")
+    assert s.throughput_rps == 0.0
+
+
+def test_router_stats_empty():
+    s = RouterStats()
+    assert s.throughput_rps == 0.0
+    assert s.latency_quantile(0.99) == 0.0
+    out = s.summary()
+    assert out["served"] == 0 and out["p99_ms"] == 0.0

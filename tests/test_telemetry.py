@@ -78,6 +78,54 @@ def test_histogram_empty_quantile_is_zero():
 
 
 # ---------------------------------------------------------------------------
+# bounded reservoir: memory cap with exact-below / estimate-above semantics
+# ---------------------------------------------------------------------------
+
+def test_reservoir_exact_below_cap():
+    h = T.Histogram("h_cap", max_samples=256)
+    vals = np.arange(256, dtype=np.float64)
+    h.observe_batch(vals)
+    assert not h.saturated
+    assert len(h.samples) == 256
+    assert h.quantile(0.5) == pytest.approx(np.percentile(vals, 50))
+
+
+def test_reservoir_caps_memory_and_estimates_above():
+    cap = 512
+    h = T.Histogram("h_cap2", max_samples=cap)
+    rng = np.random.default_rng(0)
+    vals = rng.lognormal(mean=-3.0, sigma=2.0, size=20 * cap)
+    h.observe_batch(vals[:10 * cap])
+    for v in vals[10 * cap:]:            # scalar path past saturation too
+        h.observe(float(v))
+    assert h.saturated
+    assert h.count == len(vals)          # exact observation count kept
+    assert len(h.samples) == cap         # memory bounded at the cap
+    assert h.sum == pytest.approx(vals.sum(), rel=1e-9)
+    # cumulative buckets stay EXACT under saturation (they never sample)
+    total = sum(1 for _ in vals)
+    assert h.cumulative_buckets()[-1] == (math.inf, total)
+    # the reservoir is an unbiased subsample: quantiles track the true
+    # distribution within a loose tolerance
+    want = np.percentile(vals, 50)
+    assert h.quantile(0.5) == pytest.approx(want, rel=0.25)
+    # every retained sample is a genuine observation (modulo the
+    # histogram's float32 storage)
+    assert np.isin(np.asarray(h.samples),
+                   vals.astype(np.float32)).all()
+
+
+def test_reservoir_reset_clears_saturation():
+    h = T.Histogram("h_cap3", max_samples=8)
+    h.observe_batch(np.arange(100, dtype=np.float64))
+    assert h.saturated
+    h.reset()
+    assert not h.saturated and h.count == 0 and len(h.samples) == 0
+    h.observe(3.0)
+    assert h.quantile(1.0) == 3.0
+
+
+# ---------------------------------------------------------------------------
 # registry aggregation across Transport instances
 # ---------------------------------------------------------------------------
 
