@@ -15,15 +15,17 @@ Prints ``name,us_per_call,derived`` CSV.  Module map:
   bench_serving       — online inference: cache hierarchy vs no-cache
   bench_async         — §3.2.7 staleness-bounded async full-graph training
                         (writes BENCH_async.json)
+  bench_dynamic       — dynamic graphs: incremental delta invalidation vs
+                        full-flush rebuild (writes BENCH_dynamic.json)
 """
 import sys
 import traceback
 
 from benchmarks import (bench_abstraction, bench_async, bench_caching,
-                        bench_datasets, bench_distributed, bench_kernels,
-                        bench_partitioning, bench_performance,
-                        bench_roofline, bench_sampling, bench_scheduling,
-                        bench_serving)
+                        bench_datasets, bench_distributed, bench_dynamic,
+                        bench_kernels, bench_partitioning,
+                        bench_performance, bench_roofline, bench_sampling,
+                        bench_scheduling, bench_serving)
 
 MODULES = [
     ("partitioning", bench_partitioning),
@@ -38,6 +40,7 @@ MODULES = [
     ("roofline", bench_roofline),
     ("serving", bench_serving),
     ("async", bench_async),
+    ("dynamic", bench_dynamic),
 ]
 
 

@@ -30,7 +30,7 @@ SKIP_DIRS = {".git", "__pycache__", ".pytest_cache", "node_modules"}
 EXPORT_MODULES = ["repro.distributed", "repro.serving"]
 CORE_MODULES = ["repro.core.halo", "repro.core.caching",
                 "repro.core.comm", "repro.core.propagation",
-                "repro.core.telemetry"]
+                "repro.core.telemetry", "repro.core.updates"]
 
 
 def markdown_files() -> list:

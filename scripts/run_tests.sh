@@ -18,6 +18,9 @@
 #   scripts/run_tests.sh replicas   # elastic serving tier: router/autoscale/
 #                                   # hot-swap units + crash-safe checkpoint
 #                                   # resume tests
+#   scripts/run_tests.sh dynamic    # dynamic-graph tier: update-log units +
+#                                   # delta-vs-rebuild equivalence subprocess
+#                                   # matrix ({1,2} devices x {hash,ldg})
 #   scripts/run_tests.sh all        # everything
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -41,7 +44,13 @@ case "$tier" in
   replicas)
     exec python -m pytest -q -m "not distributed" \
       tests/test_replica_serving.py tests/test_checkpoint.py "$@" ;;
+  dynamic)
+    python -m pytest -q -m "not distributed" tests/test_dynamic_graph.py "$@"
+    python tests/dynamic_train_check.py 1 hash
+    python tests/dynamic_train_check.py 1 ldg
+    python tests/dynamic_train_check.py 2 hash
+    exec python tests/dynamic_train_check.py 2 ldg ;;
   all)   exec python -m pytest -q "$@" ;;
-  *) echo "usage: $0 [tier1|tier2|kernels|comm|docs|obs|replicas|all] [pytest args...]" >&2
+  *) echo "usage: $0 [tier1|tier2|kernels|comm|docs|obs|replicas|dynamic|all] [pytest args...]" >&2
      exit 2 ;;
 esac

@@ -271,6 +271,43 @@ class HaloExchange:
             "halo_staleness_violations_total",
             "ghost rows left older than the bound after planning "
             "(structurally 0 — a nonzero value is a bug)")
+        # graph-delta invalidations: per-layer ghost rows forced into the
+        # next plan's must-refresh set regardless of the staleness bound
+        self.delta_rows = 0
+        self._m_delta = telemetry.counter(
+            "delta_refresh_rows_total",
+            "ghost buffer rows (per layer) force-refreshed because a "
+            "graph delta touched their owners")
+
+    # -- graph-delta invalidation ------------------------------------------
+    def invalidate_rows(self, rows: np.ndarray) -> int:
+        """Delta-aware invalidation: mark the given buffer rows (relabeled
+        id space) never-written in EVERY layer buffer, so the next
+        :meth:`plan_refresh` force-refreshes them regardless of the
+        staleness bound ``S`` — a ghost whose owner a graph delta touched
+        must never be served from history, however young.
+
+        Rows outside the ghost set are ignored (they are nobody's ghost;
+        nothing reads them remotely).  Invalidated rows land in the
+        *must* set of the next plan, so the structural
+        ``halo_staleness_violations_total == 0`` guarantee is preserved,
+        and their refresh is excluded from the age histogram exactly
+        like first fills (version ``NEVER`` carries no meaningful age).
+
+        Returns the number of (row, layer) buffer entries invalidated,
+        also counted into ``delta_refresh_rows_total``.
+        """
+        rows = np.asarray(rows, np.int64)
+        n = len(self.copies)
+        m = np.zeros(n, bool)
+        m[rows[(rows >= 0) & (rows < n)]] = True
+        m &= self.ghost_rows
+        for buf in self.buffers:
+            buf.invalidate(m)
+        cnt = int(m.sum()) * len(self.buffers)
+        self.delta_rows += cnt
+        self._m_delta.inc(cnt)
+        return cnt
 
     # -- refresh planning --------------------------------------------------
     def plan_refresh(self) -> RefreshPlan:
@@ -365,6 +402,7 @@ class HaloExchange:
             "ghost_rows": self.n_ghost,
             "steps_planned": self.steps_planned,
             "refreshed_rows_total": self.total_rows,
+            "delta_refresh_rows": self.delta_rows,
             "bytes_total": self.total_bytes,
             "bytes_per_step": self.total_bytes / steps,
             "sync_bytes_per_step": self.sync_bytes_per_step(),

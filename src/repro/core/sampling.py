@@ -86,7 +86,8 @@ def _build_block(g: Graph, dst: np.ndarray, src_extra: np.ndarray,
 
 
 def sample_block_padded(g: Graph, gr: Graph, dst: np.ndarray, fanout: int,
-                        rng_for, *, expand: np.ndarray = None) -> Block:
+                        rng_for, *, expand: np.ndarray = None,
+                        picker=None) -> Block:
     """One fixed-shape layer expansion (the serving-path primitive).
 
     Unlike the training samplers above, ``dst`` here is a PADDED id array
@@ -99,6 +100,10 @@ def sample_block_padded(g: Graph, gr: Graph, dst: np.ndarray, fanout: int,
     sampled neighborhood is stable across requests (cache consistency).
     ``expand`` (bool, aligned with ``dst``) restricts which dst nodes get
     edges — serving skips expansion for embedding-cache hits.
+    ``picker(node, nbr)``, when given, replaces the per-node rng pick
+    entirely (the delta-aware samplers memoize picks through it; any
+    picker must stay a pure function of ``(node, nbr)`` to preserve the
+    determinism contract).
     """
     dst = np.asarray(dst, np.int64)
     dcap = len(dst)
@@ -115,9 +120,12 @@ def sample_block_padded(g: Graph, gr: Graph, dst: np.ndarray, fanout: int,
         nbr = gr.neighbors(int(d))
         if len(nbr) == 0:
             continue
-        rng = rng_for(int(d))
-        pick = nbr if len(nbr) <= fanout else rng.choice(
-            nbr, fanout, replace=False)
+        if picker is not None:
+            pick = picker(int(d), nbr)
+        else:
+            rng = rng_for(int(d))
+            pick = nbr if len(nbr) <= fanout else rng.choice(
+                nbr, fanout, replace=False)
         for s in pick:
             edges.append((int(s), int(d)))
         srcs.append(np.asarray(pick, np.int64))

@@ -206,6 +206,7 @@ class AsyncFullGraphTrainer:
         self.g = g
         self.cfg = cfg
         self.n_dev = n_dev
+        self.partitioner = partitioner
         self.codec = resolve_codec(cfg.wire_codec)
         self.sg = shard_graph(g, n_dev, method=partitioner)
         layer_dims = [cfg.hidden] * (cfg.num_layers - 1)
@@ -223,11 +224,67 @@ class AsyncFullGraphTrainer:
         self.steps_run = 0
         self.consumed_bytes = 0
         self.consumed_rows = 0
+        self._update_seq = 0
         self.step_times_s: List[float] = []
         self._m_step = telemetry.histogram(
             "train_step_seconds", "wall time per executed training step",
             buckets=telemetry.DEFAULT_TIME_BUCKETS,
             mode="fullgraph_async")
+
+    # -- dynamic graphs ----------------------------------------------------
+    def fold_updates(self, log, upto_seq=None) -> dict:
+        """Continual training: fold pending
+        :class:`repro.core.updates.GraphUpdateLog` events into the
+        training graph between epochs, WITHOUT a cold restart.
+
+        The graph arrays mutate in place, the sharded layout is rebuilt
+        (edge deltas change the padded edge lists; ``hash`` keeps the
+        same node assignment, ``ldg``/``fennel`` may re-balance), and the
+        :class:`HaloExchange` is rebuilt on the SAME version clock with
+        every buffer row ported by node id — so untouched ghost rows
+        keep their values and version stamps, and their staleness
+        accounting survives the fold.  Rows owned by the
+        ``(num_layers-1)``-hop delta frontier are then invalidated: the
+        next plan force-refreshes exactly them, regardless of the bound
+        S, so a stale read never spans a graph mutation
+        (``halo_staleness_violations_total`` stays 0).
+
+        The jitted step is reused as-is (it closes over the optimizer and
+        mesh, not the layout).  Error-feedback residuals are reset to
+        zero — they priced rows of the pre-fold graph.  Idempotent per
+        sequence number.  Returns a fold summary dict."""
+        from repro.core.updates import fold_in_place
+        upto = log.last_seq if upto_seq is None else upto_seq
+        if upto <= self._update_seq:
+            return {"events": 0, "touched_nodes": 0,
+                    "invalidated_rows": 0, "upto_seq": self._update_seq}
+        delta, frontier = fold_in_place(
+            self.g, log, self._update_seq, upto,
+            hops=self.cfg.num_layers - 1)
+        old_sg, old_ex = self.sg, self.exchange
+        self.sg = shard_graph(self.g, self.n_dev, method=self.partitioner)
+        layer_dims = [self.cfg.hidden] * (self.cfg.num_layers - 1)
+        self.exchange = exchange_for_shards(
+            self.g, self.sg, layer_dims,
+            max_staleness=old_ex.max_staleness,
+            refresh_frac=old_ex.refresh_frac, codec=self.codec,
+            clock=old_ex.clock)
+        # port buffer state by NODE id: perm maps original id -> padded
+        # row, so row contents and version stamps follow each node across
+        # any re-partition; rows nothing maps to keep NEVER (cold)
+        for new_buf, old_buf in zip(self.exchange.buffers, old_ex.buffers):
+            new_buf.values[self.sg.perm] = old_buf.values[old_sg.perm]
+            new_buf.version[self.sg.perm] = old_buf.version[old_sg.perm]
+        n_inv = self.exchange.invalidate_rows(self.sg.perm[frontier])
+        if self.codec.error_feedback:
+            self._residuals = tuple(
+                jnp.zeros((self.sg.n_local * self.n_dev, d), jnp.float32)
+                for d in layer_dims)
+        self._update_seq = upto
+        return {"events": delta.n_events,
+                "touched_nodes": int(len(delta.nodes)),
+                "invalidated_rows": n_inv,
+                "upto_seq": upto}
 
     # -- training loop -----------------------------------------------------
     def run(self, params, opt_state, epochs: int, *, log_every: int = 0,

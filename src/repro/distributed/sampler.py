@@ -118,6 +118,21 @@ class DistributedMinibatchSampler:
         ghost[self.layout.halo[p]] = True
         return order[ghost[order]][:capacity]
 
+    # -- delta awareness ---------------------------------------------------
+    def apply_delta(self, touched: np.ndarray) -> int:
+        """React to an in-place graph fold whose frontier is ``touched``:
+        recompute the global-degree normalization (edge deltas change
+        degrees, and the GCN step reads ``out_deg``) and forward to the
+        underlying :meth:`ServingSampler.apply_delta` so only touched
+        nodes are re-expanded.  The partition assignment, halo layout and
+        per-partition feature stores are deliberately RETAINED: ownership
+        is keyed by node id (unchanged by edge deltas), feature stores
+        read ``g.features`` live so feature updates propagate
+        automatically, and the halo-cache admitted set is an accounting
+        hint, not a correctness surface.  Returns dropped memo entries."""
+        self.out_deg = np.maximum(self.g.out_degree(), 1).astype(np.float32)
+        return self.sampler.apply_delta(touched)
+
     # -- shape contract ----------------------------------------------------
     def block_shapes(self):
         """(dst_cap, src_cap, edge_cap) per layer, innermost first —

@@ -78,6 +78,16 @@ def parse_args(argv=None):
                          "completions (0 = never); new weights are a "
                          "fresh init per version, every response is "
                          "tagged with the one version that served it")
+    ap.add_argument("--update-stream", default="",
+                    help="JSONL graph-update stream "
+                         "(repro.core.updates.GraphUpdateLog format) "
+                         "folded into the served graph mid-run: "
+                         "incremental delta-frontier cache invalidation "
+                         "instead of a cold restart; with --replicas the "
+                         "router invalidates every replica")
+    ap.add_argument("--update-every", type=int, default=0,
+                    help="completions between update folds (0 = auto: "
+                         "~4 folds across the run)")
     ap.add_argument("--ckpt-dir", default="",
                     help="write a crash-safe (params, version) "
                          "checkpoint here after the run; if it already "
@@ -165,7 +175,8 @@ def run(args):
     capacity = int(g.num_nodes * args.cache_frac)
 
     if args.replicas > 1 or args.autoscale:
-        return _run_replicated(args, g, cfg, params, workload, capacity)
+        return _run_replicated(args, g, cfg, params, workload, capacity,
+                               _update_stream_kw(args))
 
     def serve(policy: str) -> dict:
         srv = GNNInferenceServer(
@@ -174,8 +185,17 @@ def run(args):
             max_staleness=args.staleness,
             max_wait_s=args.max_wait_ms / 1e3, seed=args.seed)
         srv.warmup()
-        srv.run(copy.deepcopy(workload))
-        return srv.summary()
+        # each serve pass folds a fresh copy of the stream into a fresh
+        # copy of the graph, so baseline and cached runs stay comparable
+        kw = _update_stream_kw(args)
+        if kw:
+            srv.g = srv.sampler.g = copy.deepcopy(g)
+            srv.cache.g = srv.cache.features.g = srv.g
+            srv.sampler.apply_delta(np.zeros(0, np.int64))
+        srv.run(copy.deepcopy(workload), **kw)
+        out = srv.summary()
+        out["update_seq"] = srv._update_seq
+        return out
 
     base = serve("none")
     print(f"[no-cache ] {base['throughput_rps']:8.1f} req/s  "
@@ -204,7 +224,26 @@ def run(args):
     return res
 
 
-def _run_replicated(args, g, cfg, params, workload, capacity):
+def _update_stream_kw(args) -> dict:
+    """Build the ``run(update_log=, update_every=, update_chunk=)``
+    kwargs for ``--update-stream``: default cadence folds after every
+    quarter of the workload, spreading the stream across ~4 chunks so
+    mutations actually interleave with traffic (an end-of-run fold would
+    never exercise mid-run invalidation)."""
+    if not args.update_stream:
+        return {}
+    from repro.core.updates import load_update_stream
+    log = load_update_stream(args.update_stream)
+    every = args.update_every or max(1, args.requests // 4)
+    chunk = max(1, -(-log.last_seq // 4))          # ceil(last_seq / 4)
+    print(f"update stream: {log.last_seq} events from "
+          f"{args.update_stream}, folding {chunk} events every "
+          f"{every} completions")
+    return {"update_log": log, "update_every": every,
+            "update_chunk": chunk}
+
+
+def _run_replicated(args, g, cfg, params, workload, capacity, update_kw):
     """Serve through the elastic ReplicaRouter: N replicas, optional
     autoscaling, rolling hot-swap every K completions, crash-safe
     stop/resume via ``--ckpt-dir``."""
@@ -247,8 +286,11 @@ def _run_replicated(args, g, cfg, params, workload, capacity):
     stats = router.run(workload,
                        hot_swap_every=args.hot_swap_every,
                        new_params_fn=(fresh_params
-                                      if args.hot_swap_every else None))
+                                      if args.hot_swap_every else None),
+                       **update_kw)
     out = router.summary()
+    if update_kw:
+        print(f"graph updates folded through seq {router._update_seq}")
     mode = "autoscale" if args.autoscale else "fixed"
     print(f"[replicated] {args.router_policy}/{mode}  "
           f"{out['throughput_rps']:8.1f} req/s  "

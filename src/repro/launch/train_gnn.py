@@ -70,6 +70,17 @@ def parse_args(argv=None):
     ap.add_argument("--refresh-frac", type=float, default=0.0,
                     help="extra per-step ghost refresh budget as a "
                          "fraction of the ghost set (--fullgraph only)")
+    ap.add_argument("--update-stream", default="",
+                    help="continual training: a JSONL graph-update "
+                         "stream (repro.core.updates.GraphUpdateLog "
+                         "format) folded into the training graph "
+                         "between epochs — incremental re-shard + "
+                         "delta-frontier ghost invalidation, no cold "
+                         "restart (--fullgraph only)")
+    ap.add_argument("--updates-per-epoch", type=int, default=0,
+                    help="events folded between consecutive epochs "
+                         "(0 = spread the whole stream evenly across "
+                         "the run)")
     ap.add_argument("--sampler", default="neighbor",
                     choices=["neighbor", "importance", "fastgcn", "ladies",
                              "cluster", "saint"])
@@ -141,6 +152,13 @@ def run(args):
         raise SystemExit("--wire-codec is wired through --fullgraph and "
                          "--minibatch; the synchronous full-graph modes "
                          "move raw fp32")
+    if args.update_stream and not args.fullgraph:
+        # continual training folds deltas through the async trainer's
+        # versioned ghost state; the other paths have no incremental
+        # invalidation surface and would silently train a frozen graph
+        raise SystemExit("--update-stream requires --fullgraph "
+                         "(continual training folds deltas through the "
+                         "async trainer's versioned ghost buffers)")
     if args.devices > 1 and "--xla_force_host_platform_device_count" not in \
             os.environ.get("XLA_FLAGS", ""):
         os.environ["XLA_FLAGS"] = (
@@ -198,8 +216,29 @@ def run(args):
             g, cfg, opt, n_dev, partitioner=method,
             staleness=max(args.staleness, 0),
             refresh_frac=args.refresh_frac)
-        params, ostate, loss = trainer.run(params, ostate, args.epochs,
-                                           log_every=5)
+        if args.update_stream:
+            import math as _math
+
+            from repro.core.updates import load_update_stream
+            log = load_update_stream(args.update_stream)
+            per = args.updates_per_epoch or _math.ceil(
+                log.last_seq / max(args.epochs - 1, 1))
+            print(f"update stream: {log.last_seq} events from "
+                  f"{args.update_stream}, folding {per}/epoch")
+            loss = float("nan")
+            for epoch in range(args.epochs):
+                params, ostate, loss = trainer.run(params, ostate, 1)
+                if trainer._update_seq < log.last_seq:
+                    upto = min(trainer._update_seq + per, log.last_seq)
+                    fold = trainer.fold_updates(log, upto)
+                    print(f"epoch {epoch:3d} loss {float(loss):.4f} "
+                          f"folded {fold['events']} events "
+                          f"(touched {fold['touched_nodes']} nodes, "
+                          f"invalidated {fold['invalidated_rows']} "
+                          f"ghost rows)")
+        else:
+            params, ostate, loss = trainer.run(params, ostate, args.epochs,
+                                               log_every=5)
         st = trainer.stats()
         print(f"final accuracy {trainer.accuracy(params):.3f}")
         print(f"ghost rows {st['ghost_rows']}; wire codec "

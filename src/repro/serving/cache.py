@@ -103,6 +103,9 @@ class EmbeddingCache:
             path="serving.features")
         self.hits = 0
         self.misses = 0
+        # rows dropped by incremental (delta-driven) invalidation — the
+        # counter the dynamic-graph bench compares against full flushes
+        self.invalidated_rows = 0
         # model-weight version whose outputs the planes currently hold.
         # Readers on a different params version must treat the cache as
         # cold (see GNNInferenceServer.serve_batch) — mixing embeddings
@@ -113,6 +116,10 @@ class EmbeddingCache:
             "cache_lookups_total", cache="serving.embedding", result="hit")
         self._m_misses = telemetry.counter(
             "cache_lookups_total", cache="serving.embedding", result="miss")
+        self._m_invalidated = telemetry.counter(
+            "cache_invalidated_rows_total",
+            "embedding rows dropped by incremental (delta-driven) "
+            "invalidation", cache="serving.embedding")
 
     @property
     def clock(self) -> int:
@@ -192,6 +199,37 @@ class EmbeddingCache:
         for plane in self.planes.values():
             plane.invalidate(rows)
 
+    def invalidate_rows(self, node_ids: np.ndarray, *,
+                        tick: bool = True) -> int:
+        """Incremental (delta-driven) invalidation: age exactly the rows
+        of ``node_ids`` to ``NEVER`` across every plane — untouched rows
+        keep their versions and stay servable within the staleness
+        bound.  This is the surgical alternative to
+        :meth:`bump_params_version`'s all-or-nothing flush: a graph
+        delta only poisons the frontier it reaches, so only that
+        frontier pays a recompute.
+
+        ``tick`` (default) advances the shared clock once — a delta fold
+        is a refresh epoch, so the write that re-fills an invalidated
+        row is stamped strictly after the invalidation (the ordering the
+        "never serve pre-invalidation values" property asserts).
+
+        Returns the number of admitted cache rows invalidated (ids
+        outside the admitted set cost nothing and count nothing).
+        """
+        ids = np.asarray(node_ids, np.int64)
+        ids = ids[(ids >= 0) & (ids < len(self.slot))]
+        rows = np.unique(self.slot[ids])
+        rows = rows[rows >= 0]
+        for plane in self.planes.values():
+            plane.invalidate(rows)
+        n = int(len(rows))
+        self.invalidated_rows += n
+        self._m_invalidated.inc(n)
+        if tick:
+            self.vclock.tick()
+        return n
+
     def update_features(self, ids: np.ndarray, rows: np.ndarray) -> None:
         """Feature update path: mutate the store and invalidate dependents.
         (1-hop dependents would need graph traversal; serving treats a
@@ -212,8 +250,10 @@ class EmbeddingCache:
         accounting)."""
         self.hits = 0
         self.misses = 0
+        self.invalidated_rows = 0
         self._m_hits.reset()
         self._m_misses.reset()
+        self._m_invalidated.reset()
         self.features.reset_stats()
         for t in self.fill.values():
             t.reset_counters()
@@ -231,6 +271,7 @@ class EmbeddingCache:
             "embedding_hit_ratio": self.hit_ratio,
             "embedding_hits": self.hits,
             "embedding_misses": self.misses,
+            "invalidated_rows": self.invalidated_rows,
             "feature_hit_ratio": self.features.hit_ratio,
             "feature_bytes": self.features.transferred_bytes,
             "fill_bytes": fill_bytes,

@@ -262,6 +262,8 @@ class ReplicaRouter:
         self._rr_next = 0             # round-robin cursor
         # pending rolling upgrade: (params, version, set of flipped rids)
         self._rollout: Optional[Tuple[object, int, set]] = None
+        # last GraphUpdateLog sequence folded into the (shared) graph
+        self._update_seq = 0
         self.stats = RouterStats()
         self._m_replicas = telemetry.gauge(
             "serving_replicas", "active replicas in the serving fleet")
@@ -378,6 +380,35 @@ class ReplicaRouter:
             self._m_swaps.inc()
             self._m_version.set(v)
 
+    # -- dynamic graphs ----------------------------------------------------
+    def apply_graph_update(self, log, upto_seq: Optional[int] = None) -> dict:
+        """Fold pending update-log events into the fleet's shared graph
+        and invalidate every replica's dependent state: the graph arrays
+        mutate IN PLACE exactly once (all replicas serve the same
+        ``Graph`` object), each replica's sampler drops its touched
+        memoized picks and rebuilds its reversed adjacency, and every
+        cache — shared or per-replica — surgically invalidates the
+        (L-1)-hop delta frontier.  Idempotent per sequence number; called
+        between batches by the run loop (replicas are only ever flipped
+        or invalidated while idle in virtual time)."""
+        from repro.core.updates import fold_in_place
+        upto = log.last_seq if upto_seq is None else upto_seq
+        if upto <= self._update_seq:
+            return {"events": 0, "touched_nodes": 0,
+                    "invalidated_rows": 0, "upto_seq": self._update_seq}
+        hops = len(self._server_kw["fanouts"]) - 1
+        delta, frontier = fold_in_place(
+            self.g, log, self._update_seq, upto, hops=hops)
+        for rep in self.replicas:
+            rep.server.sampler.apply_delta(delta.nodes)
+            rep.server._update_seq = upto
+        n_inv = sum(c.invalidate_rows(frontier) for c in self._caches())
+        self._update_seq = upto
+        return {"events": delta.n_events,
+                "touched_nodes": int(len(delta.nodes)),
+                "invalidated_rows": n_inv,
+                "upto_seq": upto}
+
     # -- autoscaling -------------------------------------------------------
     def _apply_autoscale(self, vnow: float) -> None:
         sc = self.autoscaler
@@ -414,8 +445,9 @@ class ReplicaRouter:
     def run(self, workload: List[InferenceRequest], *,
             tick_every_s: float = 0.0,
             hot_swap_every: int = 0,
-            new_params_fn: Optional[Callable[[int], object]] = None
-            ) -> RouterStats:
+            new_params_fn: Optional[Callable[[int], object]] = None,
+            update_log=None, update_every: int = 0,
+            update_chunk: int = 0) -> RouterStats:
         """Serve ``workload`` to completion across the fleet.
 
         ``tick_every_s`` ages the caches on the shared virtual clock
@@ -423,12 +455,18 @@ class ReplicaRouter:
         ``hot_swap_every=K`` stages a rolling upgrade after every K
         completions — ``new_params_fn(version)`` supplies the weights
         (defaults to re-shipping the current ones, which still exercises
-        the full version-flip machinery).  Returns the router stats;
-        zero drops is asserted, not hoped for."""
+        the full version-flip machinery).  ``update_log`` streams graph
+        mutations: after every ``update_every`` completions the next
+        ``update_chunk`` pending events (0 = all pending) are folded via
+        :meth:`apply_graph_update` — replicas invalidate mid-run, without
+        a restart.  Returns the router stats; zero drops is asserted,
+        not hoped for."""
         workload = sorted(workload, key=lambda r: r.arrival_s)
         vnow = 0.0
         i = 0
         served_at_last_swap = 0
+        next_update = (update_every if update_log is not None
+                       and update_every > 0 else math.inf)
         next_tick = tick_every_s if tick_every_s > 0 else math.inf
         sc = self.autoscaler
         next_check = sc.policy.check_every_s if sc else math.inf
@@ -473,6 +511,12 @@ class ReplicaRouter:
                     self.hot_swap(new_params_fn(self.version + 1)
                                   if new_params_fn else self.params)
                     served_at_last_swap = self.stats.served
+                if self.stats.served >= next_update:
+                    upto = (None if update_chunk <= 0 else
+                            min(self._update_seq + update_chunk,
+                                update_log.last_seq))
+                    self.apply_graph_update(update_log, upto)
+                    next_update += update_every
             self._reap_drained(vnow)
             if progressed:
                 continue
@@ -501,13 +545,23 @@ class ReplicaRouter:
                 events.append(next_check)
             if not events:
                 break
-            vnow = max(vnow, min(events))
+            nxt = min(events)
+            # strict progress: landing exactly on fl(oldest + max_wait)
+            # can leave a replica's recomputed head-of-line wait one
+            # rounding error short of max_wait_s — its batcher keeps
+            # refusing to emit and a plain max() pins the clock forever;
+            # marching one ulp flips the comparison within a few steps
+            vnow = nxt if nxt > vnow else math.nextafter(vnow, math.inf)
         # finish any staged upgrade now that the fleet is idle (every
         # in-flight batch completed at its own version; one replica flips
         # per pass, so loop the rollout dry)
         v_end = max([vnow] + [r.busy_until for r in self.replicas])
         while self._rollout is not None:
             self._progress_rollout(v_end)
+        if update_log is not None and update_log.last_seq > self._update_seq:
+            # drain the stream: the fleet must finish caught up with every
+            # event published before the run ended
+            self.apply_graph_update(update_log)
         self._reap_drained(math.inf)
         self.stats.wall_s += time.perf_counter() - t_start
         self.stats.replicas_final = len(self.replicas)

@@ -59,11 +59,74 @@ class ServingSampler:
         self.gr = g.reverse()
         self.fanouts = list(fanouts)
         self.seed = seed
+        # per-(layer, node) pick memo: because a node's pick is a pure
+        # function of (seed, layer, node, neighbor list), memoizing it is
+        # semantically invisible — it only skips re-deriving the rng.  The
+        # delta path (apply_delta) drops exactly the touched entries, so
+        # untouched nodes keep their sampled neighborhoods bit-identical
+        # across graph mutations (the property the cache relies on).
+        self._memo: dict = {}
+        self.memo_hits = 0
+        self.memo_misses = 0
 
     def _rng_for(self, layer: int):
         def rng_for(node: int):
             return np.random.default_rng((self.seed, layer, node))
         return rng_for
+
+    def _picker(self, layer: int):
+        """Memoizing pick function for :func:`sample_block_padded`: on a
+        miss it computes the identical pick the plain rng path would
+        (subset of the CURRENT in-neighbor list), then caches it under
+        ``(layer, node)`` until a delta touches the node."""
+        fanout = self.fanouts[layer]
+
+        def picker(node: int, nbr: np.ndarray) -> np.ndarray:
+            key = (layer, node)
+            pick = self._memo.get(key)
+            if pick is not None:
+                self.memo_hits += 1
+                return pick
+            self.memo_misses += 1
+            if len(nbr) <= fanout:
+                pick = nbr
+            else:
+                rng = np.random.default_rng((self.seed, layer, node))
+                pick = rng.choice(nbr, fanout, replace=False)
+            self._memo[key] = pick
+            return pick
+        return picker
+
+    # -- delta awareness ---------------------------------------------------
+    def apply_delta(self, touched: np.ndarray) -> int:
+        """React to a graph mutation whose frontier is ``touched`` node
+        ids: rebuild the reversed adjacency (the graph arrays were folded
+        in place) and drop the memoized picks of touched nodes across all
+        layers, so only they are re-sampled against the new neighbor
+        lists.  Untouched nodes keep their exact previous expansion.
+        Returns the number of memo entries dropped."""
+        self.gr = self.g.reverse()
+        dropped = 0
+        for node in np.asarray(touched, np.int64):
+            for layer in range(len(self.fanouts)):
+                if self._memo.pop((layer, int(node)), None) is not None:
+                    dropped += 1
+        return dropped
+
+    def affected_seed_mask(self, seeds: np.ndarray,
+                           touched: np.ndarray) -> np.ndarray:
+        """Which ``seeds`` (padded, -1 = empty) have a k-hop sampled ball
+        that can intersect the ``touched`` delta frontier — the only
+        seeds whose outputs may change, so the only ones a delta-aware
+        caller must re-serve.  Conservative: uses the full k-hop
+        neighborhood (a superset of any sampled subset)."""
+        from repro.core.updates import k_hop_nodes
+        ball = k_hop_nodes(self.g, np.asarray(touched, np.int64),
+                           len(self.fanouts))
+        hit = np.zeros(self.g.num_nodes, bool)
+        hit[ball] = True
+        seeds = np.asarray(seeds, np.int64)
+        return (seeds >= 0) & hit[np.maximum(seeds, 0)]
 
     # -- shape contract ----------------------------------------------------
     def block_shapes(self, bucket: int) -> List[Tuple[int, int, int]]:
@@ -82,9 +145,10 @@ class ServingSampler:
         """The final-layer block: seeds aggregate from their sampled
         1-hop neighborhood.  Always fully expanded (the last layer is
         never served from cache — its inputs may be)."""
+        layer = len(self.fanouts) - 1
         return sample_block_padded(
             self.g, self.gr, padded_seeds, self.fanouts[-1],
-            self._rng_for(len(self.fanouts) - 1))
+            self._rng_for(layer), picker=self._picker(layer))
 
     def sample_inner(self, dst: np.ndarray,
                      expand: Optional[np.ndarray] = None) -> List[Block]:
@@ -96,7 +160,8 @@ class ServingSampler:
         for layer in reversed(range(len(self.fanouts) - 1)):
             b = sample_block_padded(self.g, self.gr, dst,
                                     self.fanouts[layer],
-                                    self._rng_for(layer), expand=expand)
+                                    self._rng_for(layer), expand=expand,
+                                    picker=self._picker(layer))
             blocks.append(b)
             if expand is not None:
                 expand = _propagate_need(b, expand)

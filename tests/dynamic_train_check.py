@@ -1,0 +1,111 @@
+"""Delta-vs-rebuild equivalence for dynamic graphs — run in a subprocess
+with ``--xla_force_host_platform_device_count=N``.
+
+argv: n_dev partitioner
+
+1. **Continual training == cold rebuild.**  Trains 5 async full-graph
+   epochs at S=0, folds a 16-event synthetic update stream through
+   :meth:`AsyncFullGraphTrainer.fold_updates` (in-place graph mutation,
+   re-shard, halo rebuild on the same clock, frontier invalidation),
+   trains 5 more — and demands every parameter agree to <= 1e-5 with the
+   cold path (5 epochs on the base graph, then a FRESH trainer on
+   ``log.apply(g)`` for 5 more).  At S=0 every ghost row refreshes every
+   step, so ported buffer values are never read and the fold must be
+   *exact* — the same bar as ``async_train_check.py``.
+2. **Post-update serving == cold rebuild.**  Serves every node on an
+   incrementally invalidated server (graph folded in place via
+   :meth:`GNNInferenceServer.apply_graph_update` after a warm serving
+   run at staleness 4) and on a cold server built on the mutated graph,
+   and demands the logits agree to <= 1e-5.  Hot rows that survive the
+   delta frontier are served from cache — equivalence holds because
+   memoized sampler picks keep untouched neighborhoods bit-identical
+   and the frontier covers every node whose (L-1)-hop ball the delta
+   reaches.
+"""
+import copy
+import os
+import sys
+
+N_DEV = int(sys.argv[1]) if len(sys.argv) > 1 else 2
+METHOD = sys.argv[2] if len(sys.argv) > 2 else "hash"
+
+os.environ["XLA_FLAGS"] = (
+    f"--xla_force_host_platform_device_count={N_DEV} "
+    + os.environ.get("XLA_FLAGS", ""))
+
+import jax                                              # noqa: E402
+import jax.numpy as jnp                                 # noqa: E402
+import numpy as np                                      # noqa: E402
+
+from repro.core.updates import synthesize_updates       # noqa: E402
+from repro.distributed import AsyncFullGraphTrainer     # noqa: E402
+from repro.graph import generators as G                 # noqa: E402
+from repro.models.gnn import model as GM                # noqa: E402
+from repro.models.gnn.model import GNNConfig            # noqa: E402
+from repro.optim import AdamW                           # noqa: E402
+from repro.serving import GNNInferenceServer, poisson_workload  # noqa: E402
+from repro.serving.batcher import MicroBatch            # noqa: E402
+
+assert jax.device_count() == N_DEV, jax.device_count()
+
+g = G.sbm(144, 4, p_in=0.9, p_out=0.02, seed=0)
+g = G.featurize(g, 16, seed=0, class_sep=1.5)
+log = synthesize_updates(g, 16, seed=2)
+
+cfg = GNNConfig(arch="gcn", feat_dim=16, hidden=32, num_classes=4)
+opt = AdamW(lr=1e-2, weight_decay=0.0)
+params0 = GM.init_gnn(cfg, jax.random.PRNGKey(0))
+
+# -- continual training: 5 epochs, fold, 5 epochs ----------------------------
+tr = AsyncFullGraphTrainer(copy.deepcopy(g), cfg, opt, N_DEV,
+                           partitioner=METHOD, staleness=0)
+p, o, _ = tr.run(params0, opt.init(params0), 5)
+fold = tr.fold_updates(log)
+assert fold["events"] == 16, fold
+assert tr.fold_updates(log)["events"] == 0, "fold must be idempotent"
+p, o, loss_inc = tr.run(p, o, 5)
+
+# -- cold rebuild: 5 epochs on base, fresh trainer on mutated ----------------
+tr_a = AsyncFullGraphTrainer(copy.deepcopy(g), cfg, opt, N_DEV,
+                             partitioner=METHOD, staleness=0)
+p2, o2, _ = tr_a.run(params0, opt.init(params0), 5)
+tr_b = AsyncFullGraphTrainer(log.apply(g), cfg, opt, N_DEV,
+                             partitioner=METHOD, staleness=0)
+p2, o2, loss_cold = tr_b.run(p2, o2, 5)
+
+diffs = jax.tree.map(lambda a, b: float(jnp.max(jnp.abs(a - b))), p, p2)
+maxdiff_train = max(jax.tree_util.tree_leaves(diffs))
+assert maxdiff_train <= 1e-5, (maxdiff_train, diffs)
+assert abs(loss_inc - loss_cold) < 1e-5, (loss_inc, loss_cold)
+
+# -- serving: warm run, incremental fold, compare against cold ---------------
+scfg = GNNConfig(arch="sage", feat_dim=16, hidden=32, num_classes=4)
+sparams = GM.init_gnn(scfg, jax.random.PRNGKey(1))
+srv = GNNInferenceServer(copy.deepcopy(g), scfg, sparams, fanouts=[5, 5],
+                         buckets=(1, 4, 16), max_staleness=4, seed=0)
+srv.warmup()
+srv.run(poisson_workload(48, np.arange(g.num_nodes), 2000.0, seed=1))
+info = srv.apply_graph_update(log)
+assert info["events"] == 16, info
+
+cold = GNNInferenceServer(log.apply(g), scfg, sparams, fanouts=[5, 5],
+                          buckets=(1, 4, 16), max_staleness=4, seed=0)
+cold.warmup()
+
+maxdiff_serve = 0.0
+for start in range(0, g.num_nodes, 16):
+    ids = np.full(16, -1, np.int64)
+    chunk = np.arange(start, min(start + 16, g.num_nodes))
+    ids[:len(chunk)] = chunk
+    a = srv.serve_batch(MicroBatch([], ids, 16, 0.0))
+    b = cold.serve_batch(MicroBatch([], ids, 16, 0.0))
+    maxdiff_serve = max(maxdiff_serve, float(np.max(
+        np.abs(a[:len(chunk)] - b[:len(chunk)]))))
+assert maxdiff_serve <= 1e-5, maxdiff_serve
+# the incremental server must actually have served from its warm cache
+assert srv.cache.hits > 0, "incremental server never hit its cache"
+
+print(f"PASS dynamic-equivalence n_dev={N_DEV} part={METHOD} "
+      f"train_maxdiff={maxdiff_train:.2e} serve_maxdiff={maxdiff_serve:.2e} "
+      f"invalidated={info['invalidated_rows']} "
+      f"ghost_delta_rows={fold['invalidated_rows']}")

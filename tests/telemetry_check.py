@@ -11,6 +11,13 @@ bytes (matching the partition stores' ``Transport.total_bytes``), a
 step-time histogram with one sample per executed step, and nonzero
 kernel dispatch counts.
 
+Phase 3 (dynamic graphs): the update-log / invalidation counters
+(``graph_updates_total{kind}``, ``cache_invalidated_rows_total``,
+``delta_refresh_rows_total``) must equal their instance counters exactly,
+and the PR-6 warmup-reset rule must hold — ``reset_stats`` zeroes the
+instance counter AND its registry series in lockstep, so no stale count
+leaks across a warmup reset.
+
 Then: the Prometheus exposition round-trips through
 ``parse_prometheus`` and the JSONL trace validates.  Prints
 ``PASS telemetry-plane`` on success.
@@ -133,6 +140,55 @@ fused = sum(v for k, v in kd.items()
 assert fused > 0, kd
 
 # ---------------------------------------------------------------------------
+# phase 3: dynamic-graph counters — registry == instance, reset in lockstep
+# ---------------------------------------------------------------------------
+from repro.core import partitioning as PT               # noqa: E402
+from repro.core.halo import HaloExchange, build_halo    # noqa: E402
+from repro.core.updates import (GraphUpdateLog,         # noqa: E402
+                                synthesize_updates)
+
+# update-log event counters, per kind
+log = GraphUpdateLog()
+log.reset_stats()        # clean slate: the series is process-global
+synthesize_updates(g, 20, seed=5, log=log)
+assert sum(log.counts.values()) == 20
+for kind, n in log.counts.items():
+    got = reg.value("graph_updates_total", kind=kind)
+    assert int(got) == n, (kind, got, n)
+
+# serving-cache invalidation counter, through a real graph-delta fold;
+# warmup-reset rule: reset_stats zeroes instance + series together
+srv.cache.reset_stats()
+assert reg.value("cache_invalidated_rows_total",
+                 cache="serving.embedding") == 0.0
+n_inv = srv.apply_graph_update(log)["invalidated_rows"]
+got_inv = reg.value("cache_invalidated_rows_total",
+                    cache="serving.embedding")
+assert int(got_inv) == srv.cache.invalidated_rows == n_inv, (
+    got_inv, srv.cache.invalidated_rows, n_inv)
+assert n_inv > 0
+srv.cache.reset_stats()
+assert srv.cache.invalidated_rows == 0
+assert reg.value("cache_invalidated_rows_total",
+                 cache="serving.embedding") == 0.0
+
+# halo ghost-row invalidation counter (no warmup on the training side:
+# the counter has no reset entry point, so registry must track instance)
+telemetry.counter("delta_refresh_rows_total").reset()
+ex = HaloExchange(build_halo(g, PT.partition(g, 2, "hash")), [8],
+                  max_staleness=2)
+ghost = np.where(ex.ghost_rows)[0][:6]
+n_ghost_inv = ex.invalidate_rows(ghost)
+assert int(reg.value("delta_refresh_rows_total")) == ex.delta_rows \
+    == n_ghost_inv > 0
+
+# log reset zeroes counts and series in lockstep
+log.reset_stats()
+assert all(v == 0 for v in log.counts.values())
+for kind in log.counts:
+    assert reg.value("graph_updates_total", kind=kind) == 0.0
+
+# ---------------------------------------------------------------------------
 # exposition round trip + trace validation
 # ---------------------------------------------------------------------------
 with tempfile.TemporaryDirectory() as td:
@@ -148,4 +204,5 @@ with tempfile.TemporaryDirectory() as td:
 
 print(f"PASS telemetry-plane n_dev={N_DEV} "
       f"serve_hits={int(hits)} mb_kib={mb_bytes / 1024:.1f} "
-      f"steps={STEPS} fused_dispatch={int(fused)} events={n_ev}")
+      f"steps={STEPS} fused_dispatch={int(fused)} events={n_ev} "
+      f"dyn_invalidated={n_inv} dyn_ghost_rows={n_ghost_inv}")

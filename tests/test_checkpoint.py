@@ -119,6 +119,29 @@ def test_empty_and_missing_dirs(tmp_path):
         load_checkpoint(str(tmp_path), _tree(0))
 
 
+def test_tmp_only_dir_is_never_a_candidate(tmp_path):
+    """Regression: a directory holding ONLY a ``.tmp`` staging step — a
+    kill before the very first publish rename — must look empty.  Even
+    when the stage contains BOTH payload files, it was never published:
+    ``latest_step`` returns None and load/restore raise rather than
+    resuming from the torn stage."""
+    import shutil
+
+    from repro.serving import restore_params
+
+    src = tmp_path / "src"
+    save_checkpoint(str(src), 3, _tree(0), meta={"params_version": 1})
+    ckpts = tmp_path / "ckpts"
+    ckpts.mkdir()
+    shutil.move(str(src / "step_00000003"),
+                str(ckpts / "step_00000003.tmp"))
+    assert latest_step(str(ckpts)) is None
+    with pytest.raises(FileNotFoundError):
+        load_checkpoint(str(ckpts), _tree(0))
+    with pytest.raises(FileNotFoundError):
+        restore_params(str(ckpts), _tree(0))
+
+
 # ---------------------------------------------------------------------------
 # manifest validation
 # ---------------------------------------------------------------------------

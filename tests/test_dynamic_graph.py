@@ -1,0 +1,438 @@
+"""Dynamic-graph invariants: the streaming update log and the incremental
+invalidation it drives through caches, halos, and samplers.
+
+The subprocess matrix (``tests/dynamic_train_check.py``, forced
+multi-device over {1,2} devices x {hash,ldg}) proves the headline
+equivalence — continual-training params and post-update serving logits
+match a cold rebuild on the mutated graph to <= 1e-5.  The in-process
+tests here cover the host-side mechanics: log append/fold/composition
+semantics, frontier expansion, surgical cache invalidation (touched rows
+age to NEVER, untouched stay hot), delta-aware halo refresh plans with
+zero staleness violations, and sampler pick memoization across deltas.
+"""
+import copy
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.fixture(scope="module")
+def graph(graph):
+    return graph("sbm", 144)
+
+
+@pytest.fixture()
+def log_g(graph):
+    """A private mutable copy of the shared graph plus a 16-event log."""
+    from repro.core.updates import synthesize_updates
+    g = copy.deepcopy(graph)
+    return g, synthesize_updates(g, 16, seed=2)
+
+
+# ---------------------------------------------------------------------------
+# GraphUpdateLog semantics
+# ---------------------------------------------------------------------------
+
+def test_log_append_sequencing_and_clock_stamps():
+    from repro.core.caching import VersionClock
+    from repro.core.updates import GraphUpdateLog
+
+    clock = VersionClock()
+    log = GraphUpdateLog(clock=clock)
+    e1 = log.add_edge(0, 1)
+    clock.tick(3)
+    e2 = log.remove_edge(0, 1)
+    e3 = log.update_features(2, np.ones(4))
+    assert (e1.seq, e2.seq, e3.seq) == (1, 2, 3)
+    assert e1.clock == 0 and e2.clock == 3 and e3.clock == 3
+    assert log.last_seq == 3
+    assert log.counts == {"add_edge": 1, "remove_edge": 1,
+                          "update_features": 1}
+    assert e3.x.dtype == np.float32
+
+
+def test_apply_composition_is_bitwise(log_g):
+    g, log = log_g
+    for split in (0, 5, 9, 16):
+        g1 = log.apply(g, split)
+        g2 = log.apply(g1, 16, from_seq=split)
+        ref = log.apply(g, 16)
+        assert np.array_equal(g2.row_ptr, ref.row_ptr)
+        assert np.array_equal(g2.col_idx, ref.col_idx)
+        assert np.array_equal(g2.features, ref.features)
+
+
+def test_apply_never_mutates_the_input(log_g):
+    g, log = log_g
+    rp, ci = g.row_ptr.copy(), g.col_idx.copy()
+    feats = g.features.copy()
+    log.apply(g)
+    assert np.array_equal(g.row_ptr, rp)
+    assert np.array_equal(g.col_idx, ci)
+    assert np.array_equal(g.features, feats)
+
+
+def test_remove_edge_drops_all_copies_and_is_lenient():
+    from repro.core.updates import GraphUpdateLog
+    from repro.graph.structure import from_edges
+
+    g = from_edges(4, np.array([[0, 1], [0, 1], [2, 3]]))
+    log = GraphUpdateLog()
+    log.remove_edge(0, 1)
+    g2 = log.apply(g)
+    assert g2.num_edges == 1                     # both copies dropped
+    log.remove_edge(0, 3)                        # absent edge: no-op
+    assert log.apply(g).num_edges == 1
+
+
+def test_apply_rejects_out_of_range_and_bad_ranges(log_g):
+    g, _ = log_g
+    from repro.core.updates import GraphUpdateLog
+
+    bad = GraphUpdateLog()
+    bad.add_edge(0, g.num_nodes + 5)
+    with pytest.raises(ValueError):
+        bad.apply(g)
+    with pytest.raises(ValueError):
+        bad.events_between(2, 1)
+    with pytest.raises(ValueError):
+        bad.events_between(0, 99)
+    # a stream recorded against a different featurization must fail with
+    # a clear message, not a deep numpy broadcast error
+    wrong = GraphUpdateLog()
+    wrong.update_features(0, np.zeros(g.features.shape[1] + 3, np.float32))
+    with pytest.raises(ValueError, match="different featurization"):
+        wrong.apply(g)
+
+
+def test_delta_touched_sets(log_g):
+    g, log = log_g
+    d = log.delta(0, 16)
+    assert d.n_events == 16
+    assert np.array_equal(d.nodes, np.unique(d.nodes))
+    # every edge event's endpoints are in the node set
+    for u, v in d.edges:
+        assert u in d.nodes and v in d.nodes
+    # sub-range union covers the full range
+    d1, d2 = log.delta(0, 7), log.delta(7, 16)
+    assert set(d.nodes) <= set(d1.nodes) | set(d2.nodes)
+
+
+def test_jsonl_round_trip(tmp_path, log_g):
+    g, log = log_g
+    from repro.core.updates import load_update_stream
+
+    path = str(tmp_path / "events.jsonl")
+    assert log.to_jsonl(path) == 16
+    log2 = load_update_stream(path)
+    assert log2.last_seq == 16
+    ref, got = log.apply(g), log2.apply(g)
+    assert np.array_equal(ref.col_idx, got.col_idx)
+    assert np.array_equal(ref.features, got.features)
+
+
+def test_k_hop_frontier(graph):
+    from repro.core.updates import k_hop_nodes
+
+    seeds = np.array([0, 5])
+    h0 = k_hop_nodes(graph, seeds, 0)
+    assert np.array_equal(h0, seeds)
+    h1 = k_hop_nodes(graph, seeds, 1)
+    h2 = k_hop_nodes(graph, seeds, 2)
+    assert set(h0) <= set(h1) <= set(h2)
+    # 1-hop contains every out- and in-neighbor of the seeds
+    e = graph.edges()
+    for u, v in e:
+        if u in seeds:
+            assert v in h1
+        if v in seeds:
+            assert u in h1
+
+
+def test_fold_in_place_mutates_shared_object(log_g):
+    from repro.core.updates import fold_in_place
+
+    g, log = log_g
+    ref = log.apply(g)
+    holder = g                                   # same object, elsewhere
+    delta, frontier = fold_in_place(g, log, 0, hops=1)
+    assert holder.num_edges == ref.num_edges
+    assert np.array_equal(holder.col_idx, ref.col_idx)
+    assert set(delta.nodes) <= set(frontier)
+    # re-folding the same range is rejected upstream by seq cursors; the
+    # primitive itself just re-applies, so delta must match the log
+    assert delta.n_events == 16
+
+
+def test_log_reset_stats_lockstep():
+    from repro.core import telemetry
+    from repro.core.updates import GraphUpdateLog
+
+    telemetry.set_enabled(True)
+    try:
+        log = GraphUpdateLog()
+        log.reset_stats()          # series are process-global: clean slate
+        log.add_edge(0, 1)
+        log.update_features(1, np.zeros(3))
+        reg = telemetry.get_registry()
+        assert reg.value("graph_updates_total", kind="add_edge") == 1
+        log.reset_stats()
+        assert log.counts["add_edge"] == 0
+        assert reg.value("graph_updates_total", kind="add_edge") == 0
+        assert log.last_seq == 2                 # events are state, kept
+    finally:
+        telemetry.set_enabled(False)
+
+
+# ---------------------------------------------------------------------------
+# incremental cache invalidation
+# ---------------------------------------------------------------------------
+
+def test_cache_invalidate_rows_is_surgical(graph):
+    from repro.serving.cache import NEVER, EmbeddingCache
+
+    cache = EmbeddingCache(graph, [8], policy="degree", max_staleness=4)
+    ids = np.arange(32)
+    cache.store(0, ids, np.ones((32, 8), np.float32), np.ones(32, bool))
+    touched = np.arange(10)
+    n = cache.invalidate_rows(touched)
+    assert n == 10
+    assert cache.invalidated_rows == 10
+    vals, fresh = cache.lookup(0, ids)
+    assert not fresh[:10].any()                  # touched rows cold
+    assert fresh[10:].all()                      # untouched rows stay hot
+    assert (cache.planes[0].version[cache.slot[touched]] == NEVER).all()
+    # out-of-range / non-admitted ids cost nothing
+    assert cache.invalidate_rows(np.array([-3, graph.num_nodes + 7])) == 0
+
+
+def test_cache_invalidate_rows_ticks_once(graph):
+    from repro.serving.cache import EmbeddingCache
+
+    cache = EmbeddingCache(graph, [8], policy="degree", max_staleness=0)
+    t0 = cache.clock
+    cache.invalidate_rows(np.arange(4))
+    assert cache.clock == t0 + 1
+    cache.invalidate_rows(np.arange(4), tick=False)
+    assert cache.clock == t0 + 1
+
+
+def test_cache_reset_stats_covers_invalidations(graph):
+    from repro.core import telemetry
+    from repro.serving.cache import EmbeddingCache
+
+    telemetry.set_enabled(True)
+    try:
+        cache = EmbeddingCache(graph, [8], policy="degree")
+        cache.reset_stats()        # series are process-global: clean slate
+        cache.invalidate_rows(np.arange(6))
+        reg = telemetry.get_registry()
+        assert reg.value("cache_invalidated_rows_total",
+                         cache="serving.embedding") == 6
+        assert cache.stats()["invalidated_rows"] == 6
+        cache.reset_stats()
+        assert cache.invalidated_rows == 0
+        assert reg.value("cache_invalidated_rows_total",
+                         cache="serving.embedding") == 0
+    finally:
+        telemetry.set_enabled(False)
+
+
+# ---------------------------------------------------------------------------
+# delta-aware halo refresh
+# ---------------------------------------------------------------------------
+
+def _exchange(graph, s):
+    from repro.core.halo import HaloExchange, build_halo
+    from repro.core.partitioning import partition
+    layout = build_halo(graph, partition(graph, 2, "hash"))
+    return HaloExchange(layout, [8], max_staleness=s, refresh_frac=0.0)
+
+
+def test_halo_invalidate_rows_forces_refresh(graph):
+    ex = _exchange(graph, s=4)
+    # steady state: fill every ghost row once
+    plan = ex.plan_refresh()
+    ex.write_planes(plan, [np.ones((len(ex.copies), 8), np.float32)])
+    # freshly written at S=4: next plans refresh (almost) nothing
+    quiet = ex.plan_refresh()
+    touched = np.flatnonzero(ex.ghost_rows)[:5]
+    n = ex.invalidate_rows(touched)
+    assert n == 5 * len(ex.buffers)
+    assert ex.delta_rows == n
+    forced = ex.plan_refresh()
+    # every invalidated row is in the new plan's refresh mask, despite
+    # being well within the staleness bound before invalidation
+    assert forced.masks[0][touched].all()
+    assert forced.rows_moved >= quiet.rows_moved
+
+
+def test_halo_invalidate_rows_ignores_owned_rows(graph):
+    ex = _exchange(graph, s=2)
+    owned = np.flatnonzero(~ex.ghost_rows)[:4]
+    assert ex.invalidate_rows(owned) == 0
+    assert ex.invalidate_rows(np.array([-1, len(ex.copies) + 9])) == 0
+
+
+def test_halo_delta_refresh_keeps_violations_zero(graph):
+    from repro.core import telemetry
+
+    telemetry.set_enabled(True)
+    try:
+        # this series is process-global; start from a clean slate so the
+        # registry==instance cross-check below is exact
+        telemetry.counter("delta_refresh_rows_total").reset()
+        telemetry.counter("halo_staleness_violations_total").reset()
+        ex = _exchange(graph, s=3)
+        rng = np.random.default_rng(0)
+        ghost = np.flatnonzero(ex.ghost_rows)
+        for _ in range(8):
+            plan = ex.plan_refresh()
+            ex.write_planes(plan, [np.ones((len(ex.copies), 8),
+                                           np.float32)])
+            ex.invalidate_rows(rng.choice(ghost, 3, replace=False))
+        reg = telemetry.get_registry()
+        assert reg.value("halo_staleness_violations_total") == 0.0
+        assert reg.value("delta_refresh_rows_total") == ex.delta_rows > 0
+    finally:
+        telemetry.set_enabled(False)
+
+
+# ---------------------------------------------------------------------------
+# delta-aware samplers
+# ---------------------------------------------------------------------------
+
+def test_sampler_memo_is_semantically_invisible(graph):
+    from repro.serving.sampler import ServingSampler
+
+    a = ServingSampler(graph, [5, 5], seed=0)
+    b = ServingSampler(graph, [5, 5], seed=0)
+    ids = np.arange(16)
+    mb_a = a.sample(ids)
+    mb_a2 = a.sample(ids)                        # memo-hit pass
+    mb_b = b.sample(ids)
+    for x, y, z in zip(mb_a.blocks, mb_a2.blocks, mb_b.blocks):
+        assert np.array_equal(x.src_nodes, y.src_nodes)
+        assert np.array_equal(x.src_nodes, z.src_nodes)
+        assert np.array_equal(x.edge_src, z.edge_src)
+    assert a.memo_hits > 0
+
+
+def test_sampler_apply_delta_resamples_only_touched(log_g):
+    from repro.core.updates import fold_in_place
+    from repro.serving.sampler import ServingSampler
+
+    g, log = log_g
+    inc = ServingSampler(g, [5, 5], seed=0)
+    inc.sample(np.arange(16))                    # populate the memo
+    n_memo = len(inc._memo)
+    delta, _ = fold_in_place(g, log, 0, hops=0)
+    dropped = inc.apply_delta(delta.nodes)
+    assert len(inc._memo) == n_memo - dropped
+    # post-delta expansions match a fresh sampler on the mutated graph
+    fresh = ServingSampler(g, [5, 5], seed=0)
+    mb_i, mb_f = inc.sample(np.arange(16)), fresh.sample(np.arange(16))
+    for x, y in zip(mb_i.blocks, mb_f.blocks):
+        assert np.array_equal(x.src_nodes, y.src_nodes)
+        assert np.array_equal(x.edge_src, y.edge_src)
+        assert np.array_equal(x.edge_dst, y.edge_dst)
+
+
+def test_sampler_affected_seed_mask(log_g):
+    from repro.core.updates import fold_in_place, k_hop_nodes
+    from repro.serving.sampler import ServingSampler
+
+    g, log = log_g
+    s = ServingSampler(g, [5, 5], seed=0)
+    delta, _ = fold_in_place(g, log, 0, hops=0)
+    s.apply_delta(delta.nodes)
+    seeds = np.array([-1, 0, 1, 2, 3])
+    mask = s.affected_seed_mask(seeds, delta.nodes)
+    ball = set(k_hop_nodes(g, delta.nodes, 2))
+    assert not mask[0]                           # pad slot never affected
+    for i, sd in enumerate(seeds[1:], start=1):
+        assert mask[i] == (int(sd) in ball)
+
+
+def test_distributed_sampler_apply_delta_recomputes_degrees(log_g):
+    from repro.core.updates import fold_in_place
+    from repro.distributed.sampler import DistributedMinibatchSampler
+
+    g, log = log_g
+    ds = DistributedMinibatchSampler(g, 2, [5, 5], 16, partitioner="hash")
+    delta, _ = fold_in_place(g, log, 0, hops=0)
+    ds.apply_delta(delta.nodes)
+    assert np.array_equal(
+        ds.out_deg,
+        np.maximum(g.out_degree(), 1).astype(np.float32))
+    # sampling still works and stays partition-covering after the fold
+    batches = ds.sample_global(np.arange(16))
+    assert sum(int(b.label_mask.sum()) for b in batches) == 16
+
+
+# ---------------------------------------------------------------------------
+# serving end-to-end (in-process; the multi-device matrix runs the
+# subprocess check below)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_serving_delta_equals_rebuild_inprocess(log_g):
+    import jax
+
+    from repro.models.gnn import model as GM
+    from repro.models.gnn.model import GNNConfig
+    from repro.serving import GNNInferenceServer, poisson_workload
+    from repro.serving.batcher import MicroBatch
+
+    g, log = log_g
+    cfg = GNNConfig(arch="sage", feat_dim=16, hidden=32, num_classes=4)
+    params = GM.init_gnn(cfg, jax.random.PRNGKey(0))
+    srv = GNNInferenceServer(copy.deepcopy(g), cfg, params,
+                             fanouts=[5, 5], buckets=(1, 16),
+                             max_staleness=4, seed=0)
+    srv.warmup()
+    srv.run(poisson_workload(32, np.arange(g.num_nodes), 2000.0, seed=1))
+    info = srv.apply_graph_update(log)
+    assert info["events"] == 16
+    assert srv.apply_graph_update(log)["events"] == 0    # idempotent
+
+    cold = GNNInferenceServer(log.apply(g), cfg, params,
+                              fanouts=[5, 5], buckets=(1, 16),
+                              max_staleness=4, seed=0)
+    cold.warmup()
+    for start in range(0, g.num_nodes, 16):
+        ids = np.full(16, -1, np.int64)
+        chunk = np.arange(start, min(start + 16, g.num_nodes))
+        ids[:len(chunk)] = chunk
+        a = srv.serve_batch(MicroBatch([], ids, 16, 0.0))
+        b = cold.serve_batch(MicroBatch([], ids, 16, 0.0))
+        assert np.max(np.abs(a[:len(chunk)] - b[:len(chunk)])) <= 1e-5
+
+
+# ---------------------------------------------------------------------------
+# the multi-device delta-vs-rebuild matrix (subprocess; tier dynamic)
+# ---------------------------------------------------------------------------
+
+def _run_check(n_dev, partitioner, timeout=600):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    env.pop("XLA_FLAGS", None)
+    return subprocess.run(
+        [sys.executable,
+         os.path.join(ROOT, "tests", "dynamic_train_check.py"),
+         str(n_dev), partitioner],
+        capture_output=True, text=True, timeout=timeout, env=env)
+
+
+@pytest.mark.distributed
+@pytest.mark.parametrize("partitioner", ["hash", "ldg"])
+@pytest.mark.parametrize("n_dev", [1, 2])
+def test_dynamic_equivalence_matrix(n_dev, partitioner):
+    r = _run_check(n_dev, partitioner)
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "PASS dynamic-equivalence" in r.stdout, r.stdout

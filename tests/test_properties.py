@@ -263,3 +263,86 @@ def test_versioned_buffer_fresh_iff_within_bound(s, writes, seed):
         for r in range(10):
             want = r in last_write and clock.now - last_write[r] <= s
             assert fresh[r] == want, (r, clock.now, last_write.get(r))
+
+
+# ---------------------------------------------------------------------------
+# dynamic-graph update-log invariants (core/updates.py + serving cache)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(16, 80), n_ev=st.integers(1, 24),
+       k=st.integers(0, 24), seed=st.integers(0, 30))
+def test_update_log_apply_composes_over_any_split(n, n_ev, k, seed):
+    """Applying ``[0, k]`` then ``(k, last]`` is BITWISE identical to
+    applying ``[0, last]`` in one shot, for any split point — the
+    composition property every incremental fold relies on (from_edges
+    stable-sorts by source, so removals commute with the sort)."""
+    from repro.core.updates import synthesize_updates
+    g = G.featurize(G.erdos_renyi(n, 4.0, seed=seed, directed=False), 6,
+                    seed=seed, num_classes=3)
+    log = synthesize_updates(g, n_ev, seed=seed)
+    k = min(k, log.last_seq)
+    one = log.apply(g)
+    two = log.apply(log.apply(g, k), from_seq=k)
+    np.testing.assert_array_equal(one.row_ptr, two.row_ptr)
+    np.testing.assert_array_equal(one.col_idx, two.col_idx)
+    np.testing.assert_array_equal(one.features, two.features)
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(16, 60), n_ev=st.integers(2, 24),
+       cuts=st.tuples(st.integers(0, 24), st.integers(0, 24),
+                      st.integers(0, 24)),
+       seed=st.integers(0, 30))
+def test_update_log_delta_union_covers_range(n, n_ev, cuts, seed):
+    """``delta(a,b) ∪ delta(b,c) ⊇ delta(a,c)`` for any a <= b <= c —
+    folding a stream in chunks never invalidates less than folding the
+    whole range at once (in fact the touched sets are equal)."""
+    from repro.core.updates import synthesize_updates
+    g = G.featurize(G.erdos_renyi(n, 4.0, seed=seed, directed=False), 6,
+                    seed=seed, num_classes=3)
+    log = synthesize_updates(g, n_ev, seed=seed)
+    a, b, c = sorted(min(x, log.last_seq) for x in cuts)
+    ab, bc, ac = log.delta(a, b), log.delta(b, c), log.delta(a, c)
+    union_nodes = set(ab.nodes.tolist()) | set(bc.nodes.tolist())
+    assert set(ac.nodes.tolist()) <= union_nodes
+    union_edges = ({tuple(e) for e in ab.edges}
+                   | {tuple(e) for e in bc.edges})
+    assert {tuple(e) for e in ac.edges} <= union_edges
+    assert ab.n_events + bc.n_events == ac.n_events
+
+
+@settings(max_examples=25, deadline=None)
+@given(ops=st.lists(st.tuples(st.sampled_from(["store", "inv", "tick"]),
+                              st.integers(0, 9)),
+                    min_size=1, max_size=30),
+       seed=st.integers(0, 20))
+def test_cache_never_serves_pre_invalidation_rows(ops, seed):
+    """A cache row is never served from a value written BEFORE that
+    row's last invalidation: ``invalidate_rows`` ticks the shared clock,
+    so any re-fill is stamped strictly after the invalidation.  With an
+    effectively infinite staleness bound, freshness is *exactly* 'stored
+    since last invalidation', and served bytes equal the last store."""
+    from repro.serving.cache import EmbeddingCache
+    g = G.featurize(G.erdos_renyi(10, 3.0, seed=seed, directed=False), 4,
+                    seed=seed, num_classes=2)
+    cache = EmbeddingCache(g, [4], max_staleness=10 ** 6)
+    rng = np.random.default_rng(seed)
+    current = {}        # node -> value stored since its last invalidation
+    for op, node in ops:
+        if op == "store":
+            val = rng.normal(size=(1, 4)).astype(np.float32)
+            cache.store(0, np.asarray([node]), val, np.asarray([True]))
+            current[node] = val[0]
+        elif op == "inv":
+            before = cache.clock
+            cache.invalidate_rows(np.asarray([node]))
+            assert cache.clock == before + 1      # fold == refresh epoch
+            current.pop(node, None)
+        else:
+            cache.tick()
+        vals, fresh = cache.lookup(0, np.arange(10))
+        for i in range(10):
+            assert fresh[i] == (i in current), (i, op, node)
+            if fresh[i]:
+                np.testing.assert_array_equal(vals[i], current[i])

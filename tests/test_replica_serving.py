@@ -188,6 +188,64 @@ def test_router_scales_up_under_burst(graph, model):
     assert up["queue_per_replica"] > 4.0
 
 
+def test_hot_swap_completes_while_replica_draining(graph, model):
+    """Regression: a rollout staged while a replica is mid-drain must
+    still complete — the draining replica either flips while serving its
+    queue dry or is reaped, and the rollout never wedges waiting on a
+    replica that no longer takes new traffic."""
+    cfg, _ = model
+    router = _router(graph, model, n_replicas=3)
+    router.replicas[2].draining = True
+    assert router.hot_swap(GM.init_gnn(cfg, jax.random.PRNGKey(7))) == 1
+    stats = router.run(_workload(graph, 48))
+    assert router._rollout is None, "rollout wedged on a draining replica"
+    assert router.version == 1
+    assert stats.served == 48 and stats.dropped == 0
+    assert stats.torn_batches == 0
+    assert len(router.replicas) == 2        # the drained replica is reaped
+    assert all(r.version == 1 for r in router.replicas)
+
+
+def test_least_queue_tie_break_is_deterministic(graph, model):
+    """Regression: with equal queue depths AND equal busy_until, dispatch
+    must break ties by lowest replica id — not iteration order — so a
+    tied fleet fills round-robin-like and reruns are reproducible."""
+    router = _router(graph, model, n_replicas=3, policy="least_queue")
+    for r in router.replicas:
+        r.busy_until = 0.0
+    want = [(1, 0, 0), (1, 1, 0), (1, 1, 1),
+            (2, 1, 1), (2, 2, 1), (2, 2, 2)]
+    for req, expect in zip(_workload(graph, 6), want):
+        router._dispatch(req)
+        assert tuple(r.queue_depth() for r in router.replicas) == expect
+
+
+def test_router_never_livelocks_on_deadline_rounding(graph, model):
+    """Regression: same rounding livelock as the single-server loop (see
+    test_serving.py) — the clock jump lands exactly on
+    fl(oldest + max_wait), the recomputed wait rounds one error short of
+    max_wait_s, and a plain max() pins the fleet clock forever."""
+    import signal
+
+    from repro.serving import InferenceRequest
+
+    router = _router(graph, model, n_replicas=1)
+    wl = [InferenceRequest(0, 3, 0.017512410335686807),
+          InferenceRequest(1, 4, 5.0)]
+
+    def _hang(signum, frame):
+        raise TimeoutError("router loop livelocked on the max_wait deadline")
+
+    old = signal.signal(signal.SIGALRM, _hang)
+    signal.alarm(60)
+    try:
+        stats = router.run(wl)
+    finally:
+        signal.alarm(0)
+        signal.signal(signal.SIGALRM, old)
+    assert stats.served == 2 and stats.dropped == 0
+
+
 def test_router_drains_on_scale_down(graph, model):
     """A forced drain serves its queue dry before removal — no drops."""
     router = _router(graph, model, n_replicas=3)

@@ -130,6 +130,33 @@ def test_run_respects_max_wait_deadline(graph, model):
     assert wl[1].latency_s >= 0
 
 
+def test_run_never_livelocks_on_deadline_rounding(graph, model):
+    """Regression: the event jump can land the virtual clock exactly on
+    fl(oldest + max_wait), where the recomputed head-of-line wait
+    ``vnow - oldest`` rounds one error SHORT of max_wait_s — the batcher
+    keeps refusing to emit and ``max(vnow, min(events))`` never advances
+    again.  This exact arrival float reproduced the livelock
+    (0.017512410335686807 + 0.002 re-subtracted gives 0.00199…983)."""
+    import signal
+
+    srv = _server(graph, model, max_wait_s=0.002)
+    srv.warmup()
+    wl = [InferenceRequest(0, 3, 0.017512410335686807),
+          InferenceRequest(1, 4, 5.0)]
+
+    def _hang(signum, frame):
+        raise TimeoutError("serve loop livelocked on the max_wait deadline")
+
+    old = signal.signal(signal.SIGALRM, _hang)
+    signal.alarm(60)
+    try:
+        stats = srv.run(wl)
+    finally:
+        signal.alarm(0)
+        signal.signal(signal.SIGALRM, old)
+    assert stats.served == 2
+
+
 def test_batcher_bucket_for():
     b = BucketedBatcher(buckets=BUCKETS)
     assert b.bucket_for(1) == 1
