@@ -27,7 +27,7 @@ sys.path.insert(0, os.path.join(ROOT, "src"))
 LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
 SKIP_DIRS = {".git", "__pycache__", ".pytest_cache", "node_modules"}
 
-EXPORT_MODULES = ["repro.distributed", "repro.serving"]
+EXPORT_MODULES = ["repro.distributed", "repro.serving", "repro.analysis"]
 CORE_MODULES = ["repro.core.halo", "repro.core.caching",
                 "repro.core.comm", "repro.core.propagation",
                 "repro.core.telemetry", "repro.core.updates"]

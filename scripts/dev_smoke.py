@@ -26,6 +26,8 @@ EXTRA_STAGES = {
     "comm": "2-device int8 wire-codec full-graph subprocess (finite "
             "losses, compressed bytes/step)",
     "docs": "markdown links + public-API docstrings (scripts/check_docs.py)",
+    "lint": "static analysis: repro.analysis over src/ + tests/ (the "
+            "repo's own bug-class rules, exit code is the gate)",
     "obs": "telemetry plane: short serve+train launcher runs with "
            "--metrics-out/--trace-out, Prometheus + JSONL validated",
     "replicas": "elastic serving: 2-replica launcher run with one rolling "
@@ -51,6 +53,7 @@ RUN_DIST = ONLY is None or "dist_gnn" in ONLY
 RUN_KERNELS = ONLY is None or "kernels" in ONLY
 RUN_COMM = ONLY is None or "comm" in ONLY
 RUN_DOCS = ONLY is None or "docs" in ONLY
+RUN_LINT = ONLY is None or "lint" in ONLY
 RUN_OBS = ONLY is None or "obs" in ONLY
 RUN_REPLICAS = ONLY is None or "replicas" in ONLY
 RUN_DYNAMIC = ONLY is None or "dynamic" in ONLY
@@ -348,4 +351,20 @@ if RUN_DOCS:
         capture_output=True, text=True, timeout=300)
     assert r.returncode == 0, r.stdout + r.stderr
     print(f"OK {'docs':24s} {r.stdout.strip().splitlines()[-1]}")
+
+if RUN_LINT:
+    # lint stage: the merged tree must be clean under the repo's own
+    # AST invariant rules (docs/analysis.md) — findings fail the smoke
+    import os
+    import subprocess
+
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = (os.path.join(root, "src")
+                         + os.pathsep + env.get("PYTHONPATH", ""))
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.analysis", "src", "tests"],
+        cwd=root, env=env, capture_output=True, text=True, timeout=300)
+    assert r.returncode == 0, r.stdout + r.stderr
+    print(f"OK {'lint':24s} {r.stdout.strip().splitlines()[-1]}")
 print("ALL OK")

@@ -21,6 +21,9 @@
 #   scripts/run_tests.sh dynamic    # dynamic-graph tier: update-log units +
 #                                   # delta-vs-rebuild equivalence subprocess
 #                                   # matrix ({1,2} devices x {hash,ldg})
+#   scripts/run_tests.sh lint       # static analysis: repro.analysis over
+#                                   # src/ + tests/ (exit code is the gate)
+#                                   # + the linter's own test suite
 #   scripts/run_tests.sh all        # everything
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -50,7 +53,10 @@ case "$tier" in
     python tests/dynamic_train_check.py 1 ldg
     python tests/dynamic_train_check.py 2 hash
     exec python tests/dynamic_train_check.py 2 ldg ;;
+  lint)
+    python -m repro.analysis src tests
+    exec python -m pytest -q -m "not distributed" tests/test_analysis.py "$@" ;;
   all)   exec python -m pytest -q "$@" ;;
-  *) echo "usage: $0 [tier1|tier2|kernels|comm|docs|obs|replicas|dynamic|all] [pytest args...]" >&2
+  *) echo "usage: $0 [tier1|tier2|kernels|comm|docs|obs|replicas|dynamic|lint|all] [pytest args...]" >&2
      exit 2 ;;
 esac

@@ -1,0 +1,42 @@
+"""Static analysis for the repo's own historical bug classes.
+
+``repro.analysis`` is a stdlib-``ast`` rule engine: it parses Python
+sources WITHOUT importing them and checks invariants that each encode a
+bug this repo actually shipped and fixed — psum inside a differentiated
+function (PR 2), dispatch decisions pinned into a jit trace (PR 4),
+float virtual-clock livelock (PR 8), Pallas TPU tile-shape hygiene,
+telemetry-catalog drift (PR 6), and unlabeled transports.  Run it as
+``python -m repro.analysis src tests``; findings are
+``path:line: severity RULE message`` and the exit code is the gate.
+Deliberate exceptions are silenced inline with
+``# repro-lint: disable=RLxxx -- justification`` — the justification is
+mandatory.  See ``docs/analysis.md`` for the rule catalog.
+"""
+from __future__ import annotations
+
+from repro.analysis.engine import (
+    Finding,
+    LintEngine,
+    LintResult,
+    ModuleContext,
+    Rule,
+)
+from repro.analysis.rules import RULE_CLASSES, build_rules
+
+__all__ = [
+    "Finding",
+    "LintEngine",
+    "LintResult",
+    "ModuleContext",
+    "Rule",
+    "RULE_CLASSES",
+    "build_rules",
+    "main",
+]
+
+
+def main(argv=None) -> int:
+    """CLI entry point (``python -m repro.analysis``); returns the exit
+    code — 0 clean, 1 findings, 2 usage error."""
+    from repro.analysis.__main__ import main as _main
+    return _main(argv)

@@ -1,0 +1,63 @@
+"""CLI for ``repro.analysis``: ``python -m repro.analysis [paths...]``.
+
+Exit code 0 when clean, 1 when there are findings (CI gates on it),
+2 on usage errors.  ``--json`` emits a machine-readable report.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+from typing import Optional, Sequence
+
+from repro.analysis.engine import LintEngine
+from repro.analysis.rules import RULE_CLASSES, build_rules
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="AST linter for the repo's historical bug classes "
+                    "(see docs/analysis.md)")
+    parser.add_argument(
+        "paths", nargs="*", default=["src", "tests"],
+        help="files or directories to lint (default: src tests)")
+    parser.add_argument(
+        "--root", default=".",
+        help="repo root: anchors relative paths and the docs catalog "
+             "(default: cwd)")
+    parser.add_argument(
+        "--json", action="store_true", dest="as_json",
+        help="emit the report as JSON instead of human-readable lines")
+    parser.add_argument(
+        "--select", action="append", default=None, metavar="RULE",
+        help="run only these rule ids (repeatable, e.g. --select RL001)")
+    parser.add_argument(
+        "--list-rules", action="store_true",
+        help="list rule ids and exit")
+    args = parser.parse_args(argv)
+
+    if args.list_rules:
+        for rule_id, cls in sorted(RULE_CLASSES.items()):
+            print(f"{rule_id} {cls.name}")
+        return 0
+
+    if args.select:
+        unknown = sorted(set(args.select) - set(RULE_CLASSES))
+        if unknown:
+            print(f"unknown rule id(s): {', '.join(unknown)}",
+                  file=sys.stderr)
+            return 2
+
+    root = os.path.abspath(args.root)
+    engine = LintEngine(build_rules(root, select=args.select), root=root)
+    result = engine.run(args.paths)
+    if args.as_json:
+        print(result.to_json())
+    else:
+        print(result.format_human())
+    return result.exit_code
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,53 @@
+"""Rule registry for ``repro.analysis``.
+
+Each rule encodes one bug class this repo actually shipped (and fixed) —
+see ``docs/analysis.md`` for the catalog with the motivating PRs.
+"""
+from __future__ import annotations
+
+import os
+from typing import List, Optional, Sequence
+
+from repro.analysis.engine import Rule
+from repro.analysis.rules.psum_grad import PsumInGradRule
+from repro.analysis.rules.trace_dispatch import TracePinnedDispatchRule
+from repro.analysis.rules.float_clock import FloatClockProgressRule
+from repro.analysis.rules.pallas_tiling import PallasTilingRule
+from repro.analysis.rules.telemetry_drift import TelemetryCatalogRule
+from repro.analysis.rules.transport_path import TransportPathRule
+
+__all__ = [
+    "PsumInGradRule", "TracePinnedDispatchRule", "FloatClockProgressRule",
+    "PallasTilingRule", "TelemetryCatalogRule", "TransportPathRule",
+    "build_rules", "RULE_CLASSES",
+]
+
+#: Rule id -> class, for ``--select`` and docs generation.
+RULE_CLASSES = {
+    PsumInGradRule.rule_id: PsumInGradRule,
+    TracePinnedDispatchRule.rule_id: TracePinnedDispatchRule,
+    FloatClockProgressRule.rule_id: FloatClockProgressRule,
+    PallasTilingRule.rule_id: PallasTilingRule,
+    TelemetryCatalogRule.rule_id: TelemetryCatalogRule,
+    TransportPathRule.rule_id: TransportPathRule,
+}
+
+
+def build_rules(root: str,
+                select: Optional[Sequence[str]] = None) -> List[Rule]:
+    """Instantiate the default rule set (fresh instances — RL005 carries
+    per-run state).  ``root`` anchors the docs-catalog path; ``select``
+    restricts to the given rule ids."""
+    rules: List[Rule] = [
+        PsumInGradRule(),
+        TracePinnedDispatchRule(),
+        FloatClockProgressRule(),
+        PallasTilingRule(),
+        TelemetryCatalogRule(
+            doc_path=os.path.join(root, "docs", "observability.md")),
+        TransportPathRule(),
+    ]
+    if select:
+        wanted = set(select)
+        rules = [r for r in rules if r.rule_id in wanted]
+    return rules

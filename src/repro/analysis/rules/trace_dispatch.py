@@ -1,0 +1,116 @@
+"""RL002 — backend/environment resolution inside a jit-compiled body
+(the PR 4 trace-pinned dispatch class).
+
+``jax.jit`` traces a function once per shape signature and caches the
+jaxpr; a Python-level read of ``jax.default_backend()``, ``jax.devices()``
+or ``os.environ`` inside the traced body is evaluated exactly once, at
+first trace, and the result is baked into the cache for the process
+lifetime.  That is how ``kernels/ops.py`` once pinned interpret mode
+forever when an import-time warmup traced on CPU before TPU init (fixed
+in PR 4 by resolving the backend in a plain wrapper and passing it as a
+static argument — the idiom this rule enforces).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable, List
+
+from repro.analysis import astutil
+from repro.analysis.engine import Finding, ModuleContext, Rule
+
+JIT_QUALNAMES = {"jax.jit", "jit"}
+PARTIAL_QUALNAMES = {"functools.partial", "partial"}
+ENV_CALL_QUALNAMES = {
+    "jax.default_backend", "jax.devices", "jax.local_devices",
+    "jax.device_count", "jax.local_device_count", "jax.process_index",
+    "os.getenv",
+}
+
+
+def _is_jit_expr(node: ast.AST) -> bool:
+    """True for ``jax.jit``, ``jax.jit(...)`` and
+    ``functools.partial(jax.jit, ...)`` decorator expressions."""
+    qn = astutil.qualname(node)
+    if qn in JIT_QUALNAMES:
+        return True
+    if isinstance(node, ast.Call):
+        fn = astutil.call_name(node)
+        if fn in JIT_QUALNAMES:
+            return True
+        if fn in PARTIAL_QUALNAMES and node.args:
+            return astutil.qualname(node.args[0]) in JIT_QUALNAMES
+    return False
+
+
+class TracePinnedDispatchRule(Rule):
+    """Flag environment reads lexically or transitively (within the
+    module) inside functions compiled by ``jax.jit``."""
+
+    rule_id = "RL002"
+    name = "trace-pinned-dispatch"
+
+    def check_module(self, ctx: ModuleContext) -> Iterable[Finding]:
+        tree = ctx.tree
+        index = astutil.FunctionIndex(tree)
+
+        jitted: List[ast.AST] = []
+        for node in ast.walk(tree):
+            if isinstance(node, astutil.FunctionNode):
+                if any(_is_jit_expr(d) for d in node.decorator_list):
+                    jitted.append(node)
+            elif isinstance(node, ast.Call):
+                # call form: jax.jit(f) / jax.jit(f, static_argnames=...)
+                if (astutil.call_name(node) in JIT_QUALNAMES and node.args
+                        and isinstance(node.args[0], ast.Name)):
+                    jitted.extend(index.resolve(node.args[0].id))
+
+        def is_env_read(call: ast.Call) -> bool:
+            qn = astutil.call_name(call)
+            if qn in ENV_CALL_QUALNAMES:
+                return True
+            # os.environ[...] / os.environ.get(...) — any use of the
+            # mapping counts; the subscript itself is not a Call, so
+            # look one level into the callee and arguments
+            for sub in ast.walk(call):
+                if (isinstance(sub, (ast.Attribute, ast.Subscript))
+                        and astutil.qualname(getattr(sub, "value", None))
+                        == "os.environ"):
+                    return True
+            return False
+
+        findings: List[Finding] = []
+        reported = set()
+        for fn in jitted:
+            # bare `os.environ[...]` reads are not Call nodes; catch them
+            # lexically (the transitive pass below covers call forms)
+            for sub in ast.walk(fn):
+                if (isinstance(sub, (ast.Subscript, ast.Attribute))
+                        and astutil.qualname(getattr(sub, "value", None))
+                        == "os.environ"):
+                    key = (sub.lineno, sub.col_offset)
+                    if key in reported:
+                        continue
+                    reported.add(key)
+                    findings.append(Finding(
+                        self.rule_id, ctx.path, sub.lineno,
+                        f"`os.environ` read inside jit-compiled "
+                        f"`{fn.name}`: evaluated once at first trace "
+                        f"and pinned in the jit cache (PR 4 class) — "
+                        f"read it in a plain wrapper and pass the "
+                        f"result as a static argument"))
+            for call, via in index.reachable_calls(fn, is_env_read):
+                key = (call.lineno, call.col_offset)
+                if key in reported:
+                    continue
+                reported.add(key)
+                cn = astutil.call_name(call) or "os.environ"
+                findings.append(Finding(
+                    self.rule_id, ctx.path, call.lineno,
+                    f"`{cn}` resolved inside jit-compiled "
+                    f"`{fn.name}` (via `{via}`): the value is read "
+                    f"once at first trace and pinned in the jit cache "
+                    f"for the process lifetime (PR 4 trace-pinned "
+                    f"dispatch class) — resolve it in a plain-Python "
+                    f"wrapper and pass the result as a static "
+                    f"argument"))
+        return findings

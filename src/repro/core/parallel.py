@@ -48,6 +48,9 @@ def p3_layer1(x_fshard, w1_fshard, edge_src, edge_dst, edge_mask, coef,
     feat = feat * (coef * edge_mask)[:, None]
     agg = jax.ops.segment_sum(feat, edge_dst, n_pad)        # (N_pad, F/n)
     h_partial = agg @ w1_fshard                             # (N_pad, H)
+    # Forward-pass sharding primitive; layer-1 grads stay UN-psummed on
+    # purpose (see make_p3_train_step).
+    # repro-lint: disable=RL001 -- psum_scatter transpose is all_gather, no double reduction
     return jax.lax.psum_scatter(h_partial, AXIS, scatter_dimension=0,
                                 tiled=True)                 # (N_loc, H)
 
@@ -67,6 +70,12 @@ def make_p3_train_step(optimizer, n_dev: int, n_layers: int = 2):
              labels, lmask):
         n_pad = x_f.shape[0]
         n_local = n_pad // n_dev
+        # psum the (parameter-free) count OUTSIDE the differentiated
+        # function: under check_rep=False a psum inside loss_fn transposes
+        # to a second psum, scaling every gradient by n_dev (the PR 2
+        # double-psum class, masked by Adam scale-invariance — see
+        # propagation.py; statically enforced by lint rule RL001)
+        cnt = jax.lax.psum(jnp.sum(lmask), AXIS)
 
         def loss_fn(p):
             h = p3_layer1(x_f, p[0]["w"], edge_src, edge_dst, edge_mask,
@@ -86,15 +95,14 @@ def make_p3_train_step(optimizer, n_dev: int, n_layers: int = 2):
             logz = jax.nn.logsumexp(h, axis=-1)
             gold = jnp.take_along_axis(h, labels[:, None], axis=-1)[:, 0]
             local = jnp.sum((logz - gold) * lmask)
-            total = jax.lax.psum(local, AXIS)
-            cnt = jax.lax.psum(jnp.sum(lmask), AXIS)
-            return total / jnp.maximum(cnt, 1.0)
+            return local / jnp.maximum(cnt, 1.0)
 
-        loss, grads = jax.value_and_grad(loss_fn)(params)
-        # replicated params: each device's grad is its local psum
-        # contribution -> SUM across devices.  The feature-sharded layer-1
-        # weight's grad is already complete for its own shard (autodiff
-        # through psum_scatter delivers the full cotangent) -> keep as is.
+        local_loss, grads = jax.value_and_grad(loss_fn)(params)
+        loss = jax.lax.psum(local_loss, AXIS)
+        # replicated params: each device's grad is its local contribution
+        # -> SUM across devices.  The feature-sharded layer-1 weight's
+        # grad is already complete for its own shard (autodiff through
+        # psum_scatter delivers the full cotangent) -> keep as is.
         summed = jax.tree.map(lambda g_: jax.lax.psum(g_, AXIS), grads)
         summed[0]["w"] = grads[0]["w"]
         params, opt_state = optimizer.apply(params, summed, opt_state)

@@ -171,6 +171,9 @@ def push_aggregate(h_loc, edge_src_l, edge_dst_g, edge_mask, n_pad,
     partial = gather_scale_segment_sum(h_loc, edge_src_l, edge_dst_g,
                                        coef, n_pad,
                                        use_kernel=use_kernel)
+    # Forward-pass sharding primitive, not the PR 2 class: unlike psum,
+    # differentiating through psum_scatter inserts no second reduction.
+    # repro-lint: disable=RL001 -- psum_scatter transpose is all_gather, no double reduction
     return jax.lax.psum_scatter(partial, AXIS, scatter_dimension=0,
                                 tiled=True)                 # (N_loc, F)
 

@@ -9,9 +9,27 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import math
 from typing import Deque, List, Optional
 
 import numpy as np
+
+
+def advance_vclock(vnow: float, nxt: float) -> float:
+    """Advance a virtual clock toward the next event with STRICT progress.
+
+    Returns ``nxt`` when it lies strictly ahead of ``vnow``; otherwise
+    marches ``vnow`` one ulp forward.  The one-ulp step is load-bearing:
+    landing exactly on ``fl(oldest + max_wait)`` can leave the recomputed
+    head-of-line wait ``vnow - oldest`` one rounding error SHORT of
+    ``max_wait_s``, so the batcher keeps refusing to emit and a plain
+    ``max(vnow, nxt)`` pins the clock forever at 100% CPU — the PR 8
+    livelock.  Marching one ulp flips the comparison within a few
+    iterations.  Every serve/fleet loop must advance its clock through
+    this helper (statically enforced by lint rule RL003,
+    ``python -m repro.analysis``).
+    """
+    return nxt if nxt > vnow else math.nextafter(vnow, math.inf)
 
 
 @dataclasses.dataclass

@@ -54,7 +54,7 @@ from repro.graph.structure import Graph
 from repro.models.gnn.model import GNNConfig
 from repro.serving.cache import EmbeddingCache
 from repro.serving.replica import ServingReplica
-from repro.serving.request import InferenceRequest
+from repro.serving.request import InferenceRequest, advance_vclock
 from repro.serving.server import GNNInferenceServer
 
 __all__ = ["AutoscalePolicy", "AutoScaler", "ReplicaRouter", "RouterStats",
@@ -545,13 +545,9 @@ class ReplicaRouter:
                 events.append(next_check)
             if not events:
                 break
-            nxt = min(events)
-            # strict progress: landing exactly on fl(oldest + max_wait)
-            # can leave a replica's recomputed head-of-line wait one
-            # rounding error short of max_wait_s — its batcher keeps
-            # refusing to emit and a plain max() pins the clock forever;
-            # marching one ulp flips the comparison within a few steps
-            vnow = nxt if nxt > vnow else math.nextafter(vnow, math.inf)
+            # strict one-ulp progress (see request.advance_vclock: landing
+            # exactly on fl(oldest + max_wait) would livelock a replica)
+            vnow = advance_vclock(vnow, min(events))
         # finish any staged upgrade now that the fleet is idle (every
         # in-flight batch completed at its own version; one replica flips
         # per pass, so loop the rollout dry)

@@ -36,7 +36,8 @@ from repro.models.gnn import model as GM
 from repro.models.gnn.model import GNNConfig
 from repro.serving.batcher import BucketedBatcher, MicroBatch
 from repro.serving.cache import EmbeddingCache
-from repro.serving.request import InferenceRequest, RequestQueue
+from repro.serving.request import (InferenceRequest, RequestQueue,
+                                   advance_vclock)
 from repro.serving.sampler import ServingSampler, needed_feature_mask
 
 
@@ -373,14 +374,9 @@ class GNNInferenceServer:
                     events.append(oldest + self.batcher.max_wait_s)
                 if next_tick != float("inf"):
                     events.append(next_tick)
-                nxt = min(events)
-                # strict progress: landing exactly on fl(oldest + max_wait)
-                # can leave the recomputed wait `vnow - oldest` one rounding
-                # error SHORT of max_wait_s, so should_emit stays False and
-                # a plain max() pins the clock forever; marching one ulp
-                # flips the comparison within a few iterations
-                vnow = nxt if nxt > vnow else math.nextafter(
-                    vnow, float("inf"))
+                # strict one-ulp progress (see request.advance_vclock:
+                # landing exactly on fl(oldest + max_wait) would livelock)
+                vnow = advance_vclock(vnow, min(events))
                 continue
             # anchor the virtual clock: during this batch's compute,
             # virtual time = vnow + wall elapsed (exactly how vnow itself

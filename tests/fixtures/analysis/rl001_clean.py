@@ -1,0 +1,21 @@
+"""RL001 clean: loss stays local inside grad; collectives run OUTSIDE.
+
+This is the fixed idiom from PR 2 — value_and_grad over a purely local
+loss, then psum the loss and the gradients once, afterwards.
+"""
+import jax
+import jax.numpy as jnp
+
+AXIS = "dev"
+
+
+def local_loss(params, x, y):
+    pred = x @ params["w"]
+    return jnp.sum((pred - y) ** 2)
+
+
+def train_step(params, x, y):
+    local, grads = jax.value_and_grad(local_loss)(params, x, y)
+    loss = jax.lax.psum(local, AXIS)        # outside the grad: fine
+    grads = jax.lax.psum(grads, AXIS)
+    return loss, grads

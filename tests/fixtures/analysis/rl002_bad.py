@@ -1,0 +1,31 @@
+"""RL002 true positive: dispatch decisions resolved inside a jit body.
+
+The PR 4 class — ``jax.default_backend()`` and ``os.environ`` reads
+inside a jitted function are evaluated once at first trace and pinned in
+the jit cache; later environment changes are silently ignored.
+"""
+import os
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def dispatch(x):
+    backend = jax.default_backend()         # BAD: pinned at trace time
+    if os.environ.get("REPRO_INTERPRET"):   # BAD: pinned at trace time
+        return x
+    flag = os.environ["REPRO_MODE"]         # BAD: pinned at trace time
+    del backend, flag
+    return jnp.sum(x)
+
+
+def helper():
+    return jax.default_backend()            # BAD via call chain
+
+
+@jax.jit
+def dispatch_transitive(x):
+    if helper() == "cpu":
+        return x
+    return jnp.sum(x)

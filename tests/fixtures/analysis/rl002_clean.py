@@ -1,0 +1,24 @@
+"""RL002 clean: backend resolved OUTSIDE jit, passed as a static arg.
+
+The fixed idiom from PR 4 (and ``kernels/ops.py``): a plain wrapper
+resolves the environment per call and hands the decision to jit as a
+static argument, so each distinct value gets its own trace.
+"""
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _kernel(x, interpret=False):
+    del interpret
+    return jnp.sum(x)
+
+
+def dispatch(x):
+    interpret = bool(os.environ.get("REPRO_INTERPRET"))   # per call: fine
+    backend = jax.default_backend()                       # per call: fine
+    del backend
+    return _kernel(x, interpret=interpret)

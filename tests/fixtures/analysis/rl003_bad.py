@@ -1,0 +1,23 @@
+"""RL003 true positive: inline virtual-clock advances (PR 8 livelock).
+
+``max()`` and self-referencing ternaries can return the clock unchanged
+when the next event lands exactly on the current instant — the serve
+loop then spins forever.
+"""
+import math
+
+
+def run_loop(events, vnow=0.0):
+    while events:
+        nxt = min(events)
+        vnow = max(vnow, nxt)                     # BAD: can not-advance
+        events = [e for e in events if e > vnow]
+    return vnow
+
+
+def run_loop_ternary(events, vnow=0.0):
+    while events:
+        nxt = min(events)
+        vnow = nxt if nxt > vnow else math.nextafter(vnow, math.inf)  # BAD: inline
+        events = [e for e in events if e > vnow]
+    return vnow

@@ -1,0 +1,16 @@
+"""RL003 clean: clock stepped through the shared strict-progress helper.
+
+Also shows a legitimate non-self-referencing use of ``max`` with a clock
+on the RIGHT-hand side only as an operand of a fresh variable — the rule
+must not fire on ordinary accumulators or fresh derivations.
+"""
+from repro.serving.request import advance_vclock
+
+
+def run_loop(events, vnow=0.0):
+    busy = []
+    while events:
+        vnow = advance_vclock(vnow, min(events))  # strict progress: fine
+        events = [e for e in events if e > vnow]
+    v_end = max([vnow] + busy)                    # fresh name: fine
+    return v_end

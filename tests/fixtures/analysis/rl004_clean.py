@@ -1,0 +1,24 @@
+"""RL004 clean: lane/sublane-aligned tiles within the VMEM budget.
+
+Includes the ``_pick_bf`` narrow-sliver case (an 8-aligned last dim
+below 128), a runtime-computed dimension the rule must skip rather than
+guess, and a reassigned parameter default that invalidates resolution.
+"""
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+VMEM_BUDGET = 8 * 2**20
+BK = 256
+
+
+def build_specs(n, bq=128):
+    bq = min(bq, n)                              # reassigned: unresolvable
+    aligned = pl.BlockSpec((8, BK), lambda i: (i, 0))
+    sliver = pl.BlockSpec((8, 24), lambda i: (i, 0))    # _pick_bf rule
+    dynamic = pl.BlockSpec((bq, n), lambda i: (i, 0))   # skipped
+    return aligned, sliver, dynamic
+
+
+def scratch():
+    return pltpu.VMEM((128, 256), jnp.float32)   # 128 KiB: within budget

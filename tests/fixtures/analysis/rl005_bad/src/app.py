@@ -1,0 +1,9 @@
+"""RL005 true positive: one metric missing from the catalog, and the
+catalog carries one stale row registered nowhere."""
+from repro.obs import telemetry
+
+
+def instrument():
+    telemetry.counter("app_requests_total", "Requests served.")
+    telemetry.counter("app_shiny_new_total", "Not in the catalog.")  # drift
+    telemetry.gauge("app_queue_depth", "Current queue depth.")

@@ -1,0 +1,9 @@
+"""RL005 clean: every registered metric has a catalog row and vice
+versa.  The dynamically-built name is skipped by design."""
+from repro.obs import telemetry
+
+
+def instrument(shard: int):
+    telemetry.counter("app_requests_total", "Requests served.")
+    telemetry.gauge("app_queue_depth", "Current queue depth.")
+    telemetry.counter("app_" + str(shard), "Dynamic: skipped.")

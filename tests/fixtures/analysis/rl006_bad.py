@@ -1,0 +1,8 @@
+"""RL006 true positive: Transport constructed without a path label."""
+from repro.core.comm import Transport
+
+
+def make_links():
+    a = Transport("int8")                        # BAD: no path=
+    b = Transport("fp32", n_rows=4)              # BAD: no path=
+    return a, b

@@ -1,0 +1,9 @@
+"""RL006 clean: every Transport names its transfer path."""
+from repro.core.comm import Transport
+
+
+def make_links(kw):
+    a = Transport("int8", path="halo/fwd")
+    b = Transport("fp32", n_rows=4, path="weights/broadcast")
+    c = Transport("int8", **kw)                  # **kwargs may carry path
+    return a, b, c

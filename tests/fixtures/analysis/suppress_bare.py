@@ -1,0 +1,8 @@
+"""Suppression fixture: a BARE disable (no justification) suppresses
+nothing and is itself flagged (RL000)."""
+from repro.core.comm import Transport
+
+
+def make_link():
+    # repro-lint: disable=RL006
+    return Transport("int8")

@@ -1,0 +1,7 @@
+"""Suppression fixture: a justified disable silences the finding."""
+from repro.core.comm import Transport
+
+
+def make_link():
+    # repro-lint: disable=RL006 -- fixture exercising the justified-suppression path
+    return Transport("int8")

@@ -111,14 +111,14 @@ def test_jax_qdq_matches_host_qdq(codec):
 # ---------------------------------------------------------------------------
 
 def test_transport_zero_row_send_is_free():
-    t = Transport("int8")
+    t = Transport("int8", path="test/zero-row")
     out = t.send(np.zeros((0, 8), np.float32))
     assert out.shape == (0, 8)
     assert t.total_bytes == 0 and t.requests == 0
 
 
 def test_transport_charges_payload_plus_one_header_per_send():
-    t = Transport("int8")
+    t = Transport("int8", path="test/framing")
     t.send(_rows(n=4, dim=16))
     t.send(_rows(n=2, dim=16))
     c = CODECS["int8"]
@@ -153,7 +153,7 @@ def test_residual_store_values_grow_with_touched_rows():
 
 
 def test_transport_fp32_send_is_identity():
-    t = Transport("fp32")
+    t = Transport("fp32", path="test/fp32-identity")
     x = _rows()
     np.testing.assert_array_equal(t.send(x), x)
     assert t.total_bytes == x.shape[0] * 4 * x.shape[1] + HEADER_BYTES
@@ -240,7 +240,7 @@ def test_error_feedback_mean_converges_to_truth(row, sends):
     decoded sends of one fixed row converges to the true row — the
     accumulated bias after T sends is the (bounded) residual / T."""
     x = np.asarray([row], np.float32)
-    t = Transport("int8", n_rows=4)
+    t = Transport("int8", n_rows=4, path="test/error-feedback")
     ids = np.asarray([2])
     acc = np.zeros_like(x, np.float64)
     max_scale = 0.0

@@ -353,3 +353,25 @@ def test_server_other_archs(graph, arch):
     warm = srv.serve_batch(_batch(ids, 4))
     assert np.isfinite(cold[:3]).all()
     np.testing.assert_allclose(warm[:3], cold[:3], atol=1e-5)
+
+
+def test_advance_vclock_strict_progress():
+    """The shared clock helper (PR 8 fix, enforced by lint rule RL003)
+    must make strictly positive progress in every case — including the
+    exact-landing case that livelocked `max(vnow, nxt)`."""
+    import math
+
+    from repro.serving.request import advance_vclock
+
+    # normal jump: lands exactly on the next event
+    assert advance_vclock(1.0, 2.5) == 2.5
+    # exact landing (nxt == vnow): one-ulp strict march, never a stall
+    v = advance_vclock(1.0, 1.0)
+    assert v > 1.0 and v == math.nextafter(1.0, math.inf)
+    # stale event (nxt < vnow): still strictly advances
+    assert advance_vclock(1.0, 0.5) == math.nextafter(1.0, math.inf)
+    # iterating from an exact landing terminates (the PR 8 livelock shape)
+    vnow, nxt = 3.0, 3.0
+    for _ in range(4):
+        prev, vnow = vnow, advance_vclock(vnow, nxt)
+        assert vnow > prev
