@@ -20,6 +20,23 @@ paths only relatively; the byte model is backend-independent.  The
 acceptance invariant — fused modeled bytes strictly below unfused on
 every graph — is asserted here, not just reported.
 
+Three further sections ride the same JSON (PR 10 raw-speed campaign):
+
+* **reorder** — the locality-reordering axis.  Policy wall-clock is
+  measured on 4k-node instances (a 256-node graph's whole working set
+  fits in cache, so locality is invisible there): min-of-N XLA gather
+  per policy, ``reorder_speedup = t_none / best policy`` (``none`` is in
+  the candidate set, so the speedup is the autotune pick and never below
+  1.0 — per-policy numbers are reported unclamped).  The Pallas
+  fused/unfused paths are timed per policy on the small shared suite
+  (interpret off-TPU: relative numbers, recorded as such).
+* **gat** — one-pass fused online-softmax GAT vs the multi-pass
+  kernel path, plus both modeled byte totals; the fused < multipass
+  bytes invariant is asserted on every graph.
+* **int8_in** — wire-format int8 rows aggregated directly by the
+  quantized fused kernel vs decode-then-fp32, with the modeled decode
+  round-trip traffic the direct path avoids.
+
 Results land in ``BENCH_kernels.json`` at the repo root (field glossary
 in docs/benchmarks.md) and as the usual ``name,us,derived`` CSV lines.
 """
@@ -30,11 +47,17 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import ROOT, build_graph, emit, timeit
+from benchmarks.common import ROOT, build_graph, emit, timeit, timeit_min
 from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention_pallas
-from repro.kernels.segment_sum import (gather_scale_segment_sum_pallas,
+from repro.kernels.gat_fused import (gat_fused_attention_pallas,
+                                     hbm_bytes_gat_fused,
+                                     hbm_bytes_gat_multipass)
+from repro.kernels.segment_sum import (edge_tile_density,
+                                       gather_scale_segment_sum_pallas,
+                                       gather_scale_segment_sum_q_pallas,
                                        hbm_bytes_fused_kernel,
+                                       hbm_bytes_fused_q_kernel,
                                        hbm_bytes_jax_ops,
                                        hbm_bytes_unfused_kernel,
                                        segment_sum_pallas)
@@ -42,6 +65,7 @@ from repro.kernels.ssd_chunk import ssd_chunk_state_pallas
 
 GRAPHS = ("er", "sbm", "reddit-like")
 FEAT_DIM = 64
+POLICIES = ("none", "degree", "bfs", "rcm")
 
 
 def _interpret() -> bool:
@@ -123,16 +147,241 @@ def bench_aggregation() -> dict:
     return results
 
 
+def _big_graph(name: str):
+    """4k-node instances for the locality axis — large enough that the
+    feature matrix (4096 x 64 fp32 = 1 MiB) and the edge gather stream
+    overflow L1/L2, so ordering actually moves wall-clock."""
+    from repro.graph import generators as G
+    if name == "er-4k":
+        return G.erdos_renyi(4096, 8.0, seed=0, directed=False)
+    if name == "sbm-4k":
+        return G.sbm(4096, 4, p_in=0.9, p_out=0.02, seed=0)
+    if name == "reddit-4k":
+        from repro.graph.datasets import load
+        return load("reddit-like", seed=0, scale=4000 / 233_000).graph
+    raise KeyError(name)
+
+
+def bench_reorder() -> dict:
+    """Locality-reordering axis: measured min-of-N wall-clock per policy
+    on the 4k instances (XLA gather — honest on any backend), plus the
+    Pallas fused/unfused paths per policy on the small shared suite, and
+    the static locality / tile-density metrics for every combination."""
+    from repro.core.reordering import locality_report
+    rng = np.random.default_rng(0)
+    out = {"big": {}, "kernel_paths": {}}
+
+    for name in ("er-4k", "sbm-4k", "reddit-4k"):
+        g = _big_graph(name)
+        N, E = g.num_nodes, g.num_edges
+        h0 = rng.normal(size=(N, FEAT_DIM)).astype(np.float32)
+
+        @jax.jit
+        def xla_fwd(h_, src_, dst_, coef_):
+            msgs = jnp.take(h_, src_, axis=0) * coef_[:, None]
+            return jax.ops.segment_sum(msgs, dst_, N)
+
+        row = {"num_nodes": N, "num_edges": E, "policies": {}}
+        for policy in POLICIES:
+            gp, perm, inv = g.reordered(policy)
+            e = gp.edges()
+            hp, src, dst, coef = _agg_inputs(gp, rng)
+            hp = jnp.asarray(h0[np.asarray(perm)])     # same rows, relabeled
+            jax.block_until_ready(xla_fwd(hp, src, dst, coef))
+            us = timeit_min(
+                lambda: jax.block_until_ready(xla_fwd(hp, src, dst, coef)),
+                warmup=2, iters=20)
+            rep = locality_report(gp)
+            td = edge_tile_density(e[:, 0], e[:, 1], N)
+            row["policies"][policy] = {
+                "xla_gather_us": us, "locality": rep, "tile_density": td}
+            emit(f"kernels/reorder_{name}_{policy}", us,
+                 f"stride={rep['avg_gather_stride']:.1f};"
+                 f"reuse_hit={rep['reuse_hit_rate']:.3f};"
+                 f"active_tiles={td['active_tile_frac']:.3f}")
+        t_none = row["policies"]["none"]["xla_gather_us"]
+        best = min(POLICIES,
+                   key=lambda p: row["policies"][p]["xla_gather_us"])
+        row["best_policy"] = best
+        row["reorder_speedup"] = (
+            t_none / row["policies"][best]["xla_gather_us"])
+        for policy in POLICIES:     # unclamped per-policy numbers too
+            row["policies"][policy]["speedup_vs_none"] = (
+                t_none / row["policies"][policy]["xla_gather_us"])
+        assert row["reorder_speedup"] >= 1.0     # none is a candidate
+        emit(f"kernels/reorder_{name}_speedup", 0.0,
+             f"best={best};speedup={row['reorder_speedup']:.3f}")
+        out["big"][name] = row
+
+    # Pallas paths per policy on the small suite: one jit per path,
+    # reused across policies (same shapes, different id/coef data)
+    for name in GRAPHS:
+        g = build_graph(name)
+        N = g.num_nodes
+        fused_fn = jax.jit(lambda h_, s_, d_, c_: (
+            gather_scale_segment_sum_pallas(h_, s_, d_, c_, N,
+                                            interpret=_interpret())))
+
+        def unfused(h_, s_, d_, c_):
+            msgs = jnp.take(h_, s_, axis=0) * c_[:, None]
+            return segment_sum_pallas(msgs, d_, N, interpret=_interpret())
+        unfused_fn = jax.jit(unfused)
+
+        prow = {}
+        for policy in POLICIES:
+            gp, perm, inv = g.reordered(policy)
+            hp, src, dst, coef = _agg_inputs(gp, rng)
+            jax.block_until_ready(fused_fn(hp, src, dst, coef))
+            jax.block_until_ready(unfused_fn(hp, src, dst, coef))
+            prow[policy] = {
+                "fused_us": timeit_min(lambda: jax.block_until_ready(
+                    fused_fn(hp, src, dst, coef)), warmup=1, iters=3),
+                "unfused_us": timeit_min(lambda: jax.block_until_ready(
+                    unfused_fn(hp, src, dst, coef)), warmup=1, iters=3),
+            }
+            emit(f"kernels/reorder_{name}_{policy}_pallas",
+                 prow[policy]["fused_us"],
+                 f"unfused_us={prow[policy]['unfused_us']:.1f}")
+        out["kernel_paths"][name] = prow
+    return out
+
+
+def bench_gat() -> dict:
+    """One-pass fused GAT vs the multi-pass kernel path: wall-clock
+    (interpret off-TPU — relative numbers) and the modeled HBM bytes,
+    with the fused < multipass invariant asserted per graph."""
+    rng = np.random.default_rng(0)
+    heads, hd = 4, FEAT_DIM // 4
+    out = {}
+    for name in GRAPHS:
+        g = build_graph(name)
+        N, E = g.num_nodes, g.num_edges
+        e = g.edges()
+        src = jnp.asarray(e[:, 0], jnp.int32)
+        dst = jnp.asarray(e[:, 1], jnp.int32)
+        mask = jnp.ones((E,), bool)
+        hs = jnp.asarray(rng.normal(size=(N, heads * hd)), jnp.float32)
+        es = jnp.asarray(rng.normal(size=(N, heads)), jnp.float32) * 0.1
+        ed = jnp.asarray(rng.normal(size=(N, heads)), jnp.float32) * 0.1
+
+        fused = jax.jit(lambda a, b, c: gat_fused_attention_pallas(
+            a, b, c, src, dst, mask, N, heads=heads,
+            interpret=_interpret()))
+
+        def multipass(a, b, c):
+            maskf = mask.astype(jnp.float32)
+            logits = jax.nn.leaky_relu(
+                jnp.take(b, src, axis=0) + jnp.take(c, dst, axis=0), 0.2)
+            logits = jnp.where(maskf[:, None] > 0, logits, -1e30)
+            mx = jax.ops.segment_max(logits, dst, N)
+            mx = jnp.where(jnp.isfinite(mx), mx, 0.0)
+            ex = jnp.exp(logits - mx[dst]) * maskf[:, None]
+            den = segment_sum_pallas(ex, dst, N, interpret=_interpret())
+            alpha = ex / (jnp.take(den, dst, axis=0) + 1e-9)
+            msgs = (jnp.take(a.reshape(-1, heads, hd), src, axis=0)
+                    * alpha[..., None])
+            return segment_sum_pallas(msgs.reshape(-1, heads * hd), dst,
+                                      N, interpret=_interpret())
+        multipass_fn = jax.jit(multipass)
+
+        jax.block_until_ready(fused(hs, es, ed))
+        jax.block_until_ready(multipass_fn(hs, es, ed))
+        maxerr = float(jnp.max(jnp.abs(fused(hs, es, ed)
+                                       - multipass_fn(hs, es, ed))))
+        t_fused = timeit_min(lambda: jax.block_until_ready(
+            fused(hs, es, ed)), warmup=1, iters=3)
+        t_multi = timeit_min(lambda: jax.block_until_ready(
+            multipass_fn(hs, es, ed)), warmup=1, iters=3)
+        b_fused = hbm_bytes_gat_fused(E, heads, hd, N, N)
+        b_multi = hbm_bytes_gat_multipass(E, heads, hd, N, N)
+        assert b_fused["total"] < b_multi["total"], (
+            f"{name}: fused GAT modeled bytes {b_fused['total']} not "
+            f"below multipass {b_multi['total']}")
+        out[name] = {
+            "fused_us": t_fused, "multipass_us": t_multi,
+            "gat_fused_speedup": t_multi / t_fused,
+            "hbm_bytes_fused": b_fused["total"],
+            "hbm_bytes_multipass": b_multi["total"],
+            "bytes_saving": 1.0 - b_fused["total"] / b_multi["total"],
+            "max_err_vs_multipass": maxerr,
+        }
+        emit(f"kernels/gat_{name}_fused", t_fused,
+             f"multipass_us={t_multi:.1f};"
+             f"speedup={t_multi / t_fused:.2f};"
+             f"bytes_saving={out[name]['bytes_saving']:.2%};"
+             f"maxerr={maxerr:.2e}")
+    return out
+
+
+def bench_int8_in() -> dict:
+    """int8-in/fp32-accumulate aggregation: the quantized fused kernel
+    consumes wire rows + (min, scale) directly vs decoding to fp32 rows
+    first.  The two must agree to ~fp32 roundoff (the kernel performs
+    the same affine per source slab); the modeled traffic shows what the
+    skipped decode round-trip saves."""
+    rng = np.random.default_rng(0)
+    out = {}
+    for name in GRAPHS:
+        g = build_graph(name)
+        N, E = g.num_nodes, g.num_edges
+        h, src, dst, coef = _agg_inputs(g, rng)
+        hn = np.asarray(h)
+        mn = hn.min(axis=1, keepdims=True)
+        scale = np.maximum((hn.max(axis=1, keepdims=True) - mn) / 255.0,
+                           1e-12)
+        q = np.rint((hn - mn) / scale).astype(np.uint8)
+        qj, mnj, scj = jnp.asarray(q), jnp.asarray(mn), jnp.asarray(scale)
+
+        q_fn = jax.jit(lambda q_, m_, s_: gather_scale_segment_sum_q_pallas(
+            q_, m_, s_, src, dst, coef, N, interpret=_interpret()))
+        decode_fn = jax.jit(lambda q_, m_, s_: (
+            gather_scale_segment_sum_pallas(
+                m_ + q_.astype(jnp.float32) * s_, src, dst, coef, N,
+                interpret=_interpret())))
+
+        jax.block_until_ready(q_fn(qj, mnj, scj))
+        jax.block_until_ready(decode_fn(qj, mnj, scj))
+        maxdiff = float(jnp.max(jnp.abs(q_fn(qj, mnj, scj)
+                                        - decode_fn(qj, mnj, scj))))
+        t_q = timeit_min(lambda: jax.block_until_ready(
+            q_fn(qj, mnj, scj)), warmup=1, iters=3)
+        t_dec = timeit_min(lambda: jax.block_until_ready(
+            decode_fn(qj, mnj, scj)), warmup=1, iters=3)
+        bq = hbm_bytes_fused_q_kernel(E, FEAT_DIM, N, N)
+        bf = hbm_bytes_fused_kernel(E, FEAT_DIM, N, N)
+        out[name] = {
+            "int8_in_us": t_q, "decode_then_fp32_us": t_dec,
+            "max_diff_vs_decode": maxdiff,
+            "hbm_bytes_fwd_int8_in": bq["fwd"],
+            "hbm_bytes_fwd_fp32": bf["fwd"],
+            "decode_roundtrip_bytes_avoided": bq[
+                "decode_roundtrip_avoided"],
+        }
+        assert bq["fwd"] < bf["fwd"], (
+            f"{name}: int8-in fwd bytes {bq['fwd']} not below fp32 "
+            f"{bf['fwd']}")
+        emit(f"kernels/int8_in_{name}", t_q,
+             f"decode_us={t_dec:.1f};maxdiff={maxdiff:.2e};"
+             f"bytes_avoided={bq['decode_roundtrip_avoided']}")
+    return out
+
+
 def main():
     rng = np.random.default_rng(0)
 
     results = bench_aggregation()
+    reorder = bench_reorder()
+    gat = bench_gat()
+    int8_in = bench_int8_in()
     path = os.path.join(ROOT, "BENCH_kernels.json")
     with open(path, "w") as f:
         json.dump({"feat_dim": FEAT_DIM,
                    "backend": jax.default_backend(),
                    "interpret": _interpret(),
-                   "results": results},
+                   "results": results,
+                   "reorder": reorder,
+                   "gat": gat,
+                   "int8_in": int8_in},
                   f, indent=2, sort_keys=True)
 
     # flash attention

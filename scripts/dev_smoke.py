@@ -21,8 +21,9 @@ from repro.optim import AdamW
 EXTRA_STAGES = {
     "serve_gnn": "online GNN inference serving smoke (repro.serving)",
     "dist_gnn": "2-device mini-batch gradient-equivalence subprocess",
-    "kernels": "2-device Pallas-kernel grad-equivalence subprocess "
-               "(interpret mode)",
+    "kernels": "Pallas-kernel grad-equivalence subprocesses (interpret "
+               "mode): 2-device fused aggregation, one-pass fused GAT, "
+               "and a --reorder bfs --use-kernel launcher run",
     "comm": "2-device int8 wire-codec full-graph subprocess (finite "
             "losses, compressed bytes/step)",
     "docs": "markdown links + public-API docstrings (scripts/check_docs.py)",
@@ -183,6 +184,32 @@ if RUN_KERNELS:
     # kernel bodies + custom VJPs every run
     run_subprocess_check("kernels", "kernel_train_check.py",
                          ["2", "hash"], "PASS kernel-equivalence")
+    # one-pass fused GAT: training through the online-softmax kernel's
+    # composed custom VJP must match the XLA reference path
+    run_subprocess_check("kernels_gat", "gat_train_check.py",
+                         ["1"], "PASS gat-fused-equivalence")
+
+    # locality reordering end-to-end on the kernel path: the launcher
+    # must reorder, print the locality report, dispatch the fused GAT
+    # kernel, and train to a finite loss
+    import os
+    import subprocess
+
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(root, "src")
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.train_gnn",
+         "--nodes", "96", "--feat-dim", "8", "--hidden", "16",
+         "--epochs", "2", "--arch", "gat", "--use-kernel",
+         "--reorder", "bfs"],
+        capture_output=True, text=True, timeout=600, env=env)
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "reorder=bfs" in r.stdout, r.stdout
+    assert "nan" not in r.stdout.lower(), r.stdout
+    print(f"OK {'kernels_reorder':24s} "
+          f"{[l for l in r.stdout.splitlines() if 'reorder=' in l][0]}")
 
 if RUN_COMM:
     # communication plane: an int8-wire full-graph run on 2 forced

@@ -36,7 +36,9 @@ case "$tier" in
   tier2) exec python -m pytest -q -m "slow or distributed" "$@" ;;
   kernels)
     python tests/kernel_train_check.py 1 hash "$@"
-    exec python tests/kernel_train_check.py 2 hash "$@" ;;
+    python tests/kernel_train_check.py 2 hash "$@"
+    python tests/gat_train_check.py 1
+    exec python tests/gat_train_check.py 2 ;;
   comm)
     python -m pytest -q -m "not distributed" tests/test_comm.py "$@"
     exec python tests/comm_train_check.py 2 int8 ;;

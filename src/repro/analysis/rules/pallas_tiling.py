@@ -13,7 +13,12 @@ module constants, and un-reassigned parameter defaults, and checks
 
 * last dim: multiple of 128, or an 8-aligned sliver below 128 (the
   ``_pick_bf`` narrow-feature rule); a last dim of 1 pads to a full
-  lane-tile (127/128 waste) and must carry a justification;
+  lane-tile (127/128 waste) and is flagged — EXCEPT the codified
+  scalar-accumulator idiom: a 2-D ``pltpu.VMEM`` scratch ``(rows, 1)``
+  with sublane-aligned rows (online-softmax running max/denominator in
+  ``kernels/flash_attention.py`` and ``kernels/gat_fused.py``), where
+  one scalar per row is inherent to the algorithm and the lane padding
+  is the cost of keeping the reduction in VMEM;
 * second-to-last dim: multiple of 8 (or 1 for broadcast/leading axes);
 * fully-resolved ``pltpu.VMEM`` scratch shapes: byte size within the
   module's ``VMEM_BUDGET`` (default 8 MiB).
@@ -85,13 +90,26 @@ class PallasTilingRule(Rule):
         last = dims[-1]
         if last is not None:
             if last == 1 and len(dims) > 1:
-                out.append(Finding(
-                    self.rule_id, ctx.path, call.lineno,
-                    f"{kind} last dim is 1: the lane axis pads to a "
-                    f"full {LANE}-wide tile ({LANE - 1}/{LANE} of the "
-                    f"block wasted) — widen the tile, or suppress with "
-                    f"a justification if a per-row scalar column is "
-                    f"inherent to the algorithm"))
+                # codified exception: a 2-D VMEM scalar accumulator
+                # (rows, 1) with sublane-aligned rows — the online-
+                # softmax running max/denominator idiom (flash_attention,
+                # gat_fused).  BlockSpec last-dim-1 (an HBM block shaped
+                # around a scalar column) and misaligned-row scratches
+                # stay flagged.
+                # unresolvable rows are skipped, never guessed (the
+                # in-kernel _assert_vmem covers runtime-computed tiles)
+                sub0 = dims[-2]
+                scalar_acc = (kind == "VMEM" and len(dims) == 2
+                              and (sub0 is None or sub0 % SUBLANE == 0))
+                if not scalar_acc:
+                    out.append(Finding(
+                        self.rule_id, ctx.path, call.lineno,
+                        f"{kind} last dim is 1: the lane axis pads to a "
+                        f"full {LANE}-wide tile ({LANE - 1}/{LANE} of "
+                        f"the block wasted) — widen the tile; the only "
+                        f"codified exception is a 2-D VMEM scalar "
+                        f"accumulator (rows, 1) with {SUBLANE}-aligned "
+                        f"rows (online-softmax running max/denominator)"))
             elif last > 1 and last % LANE != 0 and not (
                     last < LANE and last % SUBLANE == 0):
                 out.append(Finding(

@@ -152,6 +152,26 @@ class GraphUpdateLog:
         """Highest appended sequence number (0 on an empty log)."""
         return len(self.events)
 
+    def relabel(self, inv: np.ndarray) -> "GraphUpdateLog":
+        """New log with every event's node ids mapped through ``inv``
+        (``inv[old_id] = new_id``) — the adapter that lets an
+        original-id update stream fold into a locality-packed graph
+        (``Graph.reordered``): folding commutes with relabeling, so
+        ``fold(packed, log.relabel(inv))`` is the relabeling of
+        ``fold(g, log)`` under the same permutation (the
+        fold-then-reorder regression in ``tests/test_dynamic_graph.py``).
+        Seq numbers, clock stamps, and counts are preserved; telemetry
+        counters are NOT re-incremented (relabeled events are not new
+        events)."""
+        inv = np.asarray(inv)
+        out = GraphUpdateLog(clock=self.clock)
+        for ev in self.events:
+            out.events.append(dataclasses.replace(
+                ev, u=int(inv[ev.u]),
+                v=int(inv[ev.v]) if ev.v >= 0 else -1))
+            out.counts[ev.kind] += 1
+        return out
+
     def events_between(self, from_seq: int,
                        to_seq: int) -> Iterator[GraphUpdate]:
         """Iterate events with ``from_seq < seq <= to_seq`` in order."""

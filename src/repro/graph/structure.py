@@ -48,6 +48,17 @@ class Graph:
                           features=self.features, labels=self.labels,
                           num_classes=self.num_classes)
 
+    def reordered(self, policy: str = "bfs"):
+        """Locality-reordered copy (survey §3.2.4): returns
+        ``(packed, perm, inv)`` where ``packed`` is this graph relabeled
+        by the policy (``none``/``degree``/``bfs``/``rcm``),
+        ``perm[new_id] = old_id`` and ``inv[old_id] = new_id``.  External
+        node ids map into the packed space via ``inv`` and packed results
+        are reported in original ids via ``perm`` — the id round-trip the
+        launchers' ``--reorder`` flag relies on."""
+        from repro.core.reordering import reorder_graph
+        return reorder_graph(self, policy)
+
     def subgraph(self, nodes: np.ndarray) -> "Graph":
         """Induced subgraph; node ids are re-indexed to [0, len(nodes))."""
         nodes = np.asarray(nodes)

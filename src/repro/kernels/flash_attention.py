@@ -102,9 +102,7 @@ def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
                                lambda b, h, i, j: (b, h, i, 0)),
         out_shape=jax.ShapeDtypeStruct((B, H, Sqp, hd), q.dtype),
         scratch_shapes=[
-            # repro-lint: disable=RL004 -- online-softmax running max is one scalar per query row
             pltpu.VMEM((bq, 1), jnp.float32),    # running max
-            # repro-lint: disable=RL004 -- online-softmax running denominator is one scalar per query row
             pltpu.VMEM((bq, 1), jnp.float32),    # running denominator
             pltpu.VMEM((bq, hd), jnp.float32),   # output accumulator
         ],

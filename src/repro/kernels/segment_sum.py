@@ -483,6 +483,155 @@ def gather_scale_segment_sum_pallas(h: jax.Array, edge_src: jax.Array,
                   interpret)
 
 
+# ---------------------------------------------------------------------------
+# int8-in / fp32-accumulate variant: consume wire rows without a decode pass
+# ---------------------------------------------------------------------------
+
+META_COLS = 8          # (mn, scale) packed into a sublane-aligned block
+
+
+def _fused_q_kernel(src_ref, dst_ref, coef_ref, q_ref, meta_ref, out_ref,
+                    acc_ref, *, bn: int, sp: int):
+    n_i = pl.program_id(1)
+    e_i = pl.program_id(2)
+    ne = pl.num_programs(2)
+
+    src = src_ref[:]                                   # (BE,)
+    onehot_s = (src[:, None] == jax.lax.broadcasted_iota(
+        jnp.int32, (1, sp), 1)).astype(jnp.float32)    # (BE, Sp)
+    # dequantize the resident int8 slab in VMEM: the fp32 rows exist
+    # only here, never in HBM (the wire payload feeds the kernel as-is)
+    q = q_ref[:].astype(jnp.float32)                   # (Sp, BF)
+    mn = meta_ref[:, 0:1]                              # (Sp, 1)
+    scale = meta_ref[:, 1:2]                           # (Sp, 1)
+    h = mn + q * scale
+    msgs = jnp.dot(onehot_s, h,
+                   preferred_element_type=jnp.float32)  # (BE, BF)
+    msgs = msgs * coef_ref[:].astype(jnp.float32)[:, None]
+
+    local = dst_ref[:] - n_i * bn
+    onehot_d = (local[:, None] == jax.lax.broadcasted_iota(
+        jnp.int32, (1, bn), 1)).astype(jnp.float32)    # (BE, BN)
+    contrib = jnp.dot(onehot_d.T, msgs,
+                      preferred_element_type=jnp.float32)  # (BN, BF)
+
+    @pl.when(e_i == 0)
+    def _init():
+        acc_ref[:] = contrib
+
+    @pl.when(e_i != 0)
+    def _acc():
+        acc_ref[:] = acc_ref[:] + contrib
+
+    @pl.when(e_i == ne - 1)
+    def _emit():
+        out_ref[:] = acc_ref[:].astype(out_ref.dtype)
+
+
+def gather_scale_segment_sum_q_pallas(q: jax.Array, mn: jax.Array,
+                                      scale: jax.Array,
+                                      edge_src: jax.Array,
+                                      edge_dst: jax.Array,
+                                      coef: jax.Array, num_dst: int, *,
+                                      be: int = DEFAULT_BE,
+                                      bn: int = DEFAULT_BN,
+                                      bf: int | None = None,
+                                      interpret: bool = True) -> jax.Array:
+    """int8-in / fp32-accumulate fused aggregation: like
+    :func:`gather_scale_segment_sum_pallas` but the source rows arrive in
+    the PR 5 wire format — ``q``: (num_src, F) uint8 codes with per-row
+    affine metadata ``mn``/``scale``: (num_src, 1) float32, row i
+    dequantizing to ``mn[i] + q[i] * scale[i]``.
+
+    Dequantization happens inside the kernel per source slab (the fp32
+    feature matrix is never materialized in HBM) and accumulation is
+    fp32, so the output matches decode-then-fp32 aggregation to the
+    codec's own error bound (≤ scale/2 per element before aggregation).
+    Forward-only by design: it sits on the layer-0 data path where the
+    quantized inputs carry no gradient (differentiable paths go through
+    :func:`gather_scale_segment_sum_pallas` on decoded rows).
+    """
+    S, F = q.shape
+    bf = _pick_bf(F) if bf is None else bf
+    _assert_vmem(fused_vmem_floats(S, num_dst, F, be=be, bn=bn, bf=bf)
+                 + (-(-S // SUBLANE) * SUBLANE) * META_COLS,
+                 what="gather_scale_segment_sum_q_pallas")
+    E = edge_src.shape[0]
+    Ep = _pad_edges(E, be)
+    Fp = -(-F // bf) * bf
+    Sp = -(-S // SUBLANE) * SUBLANE
+    pad_seg = num_dst
+    Np = -(-(num_dst + 1) // bn) * bn
+
+    q_p = jnp.zeros((Sp, Fp), jnp.uint8).at[:S, :F].set(
+        q.astype(jnp.uint8))
+    # pad rows keep mn = scale = 0 so they dequantize to exact zeros
+    meta_p = jnp.zeros((Sp, META_COLS), jnp.float32)
+    meta_p = meta_p.at[:S, 0:1].set(mn.astype(jnp.float32))
+    meta_p = meta_p.at[:S, 1:2].set(scale.astype(jnp.float32))
+    src_p = jnp.zeros((Ep,), jnp.int32).at[:E].set(
+        edge_src.astype(jnp.int32))
+    dst_p = jnp.full((Ep,), pad_seg, jnp.int32).at[:E].set(
+        edge_dst.astype(jnp.int32))
+    coef_p = jnp.zeros((Ep,), jnp.float32).at[:E].set(
+        coef.astype(jnp.float32))
+
+    grid = (Fp // bf, Np // bn, Ep // be)
+    out = pl.pallas_call(
+        functools.partial(_fused_q_kernel, bn=bn, sp=Sp),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((be,), lambda f, n, e: (e,)),
+            pl.BlockSpec((be,), lambda f, n, e: (e,)),
+            pl.BlockSpec((be,), lambda f, n, e: (e,)),
+            pl.BlockSpec((Sp, bf), lambda f, n, e: (0, f)),
+            pl.BlockSpec((Sp, META_COLS), lambda f, n, e: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bn, bf), lambda f, n, e: (n, f)),
+        out_shape=jax.ShapeDtypeStruct((Np, Fp), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bn, bf), jnp.float32)],
+        interpret=interpret,
+    )(src_p, dst_p, coef_p, q_p, meta_p)
+    return out[:num_dst, :F]
+
+
+def edge_tile_density(edge_src, edge_dst, num_dst: int, *,
+                      be: int = DEFAULT_BE, bn: int = DEFAULT_BN) -> dict:
+    """Pure-numpy VMEM-residency / tile-density metrics of the blocked
+    kernels for a given edge ordering (what ``--reorder`` improves).
+
+    Returns a dict:
+
+    * ``active_tile_frac`` — fraction of (dst-tile, edge-tile) grid
+      cells holding at least one real edge.  The blocked scatter sweeps
+      the full ``n_tiles x e_tiles`` grid regardless, so a low fraction
+      is both wasted work today and the headroom a tile-skipping kernel
+      would reclaim; locality reordering concentrates edges into few
+      cells.
+    * ``src_rows_per_edge_tile`` — mean distinct source rows gathered
+      per edge tile, normalized by the tile's edge count (1.0 = every
+      edge hits a different row, lower = gathers reuse VMEM-resident
+      rows within the tile).
+    """
+    src = np.asarray(edge_src, np.int64)
+    dst = np.asarray(edge_dst, np.int64)
+    E = len(src)
+    if E == 0:
+        return {"active_tile_frac": 0.0, "src_rows_per_edge_tile": 0.0}
+    e_tiles = -(-E // be)
+    n_tiles = -(-(num_dst + 1) // bn)
+    e_idx = np.arange(E) // be
+    cells = np.unique(e_idx * n_tiles + dst // bn)
+    rows = []
+    for t in range(e_tiles):
+        chunk = src[t * be:(t + 1) * be]
+        rows.append(len(np.unique(chunk)) / len(chunk))
+    return {
+        "active_tile_frac": len(cells) / (n_tiles * e_tiles),
+        "src_rows_per_edge_tile": float(np.mean(rows)),
+    }
+
+
 def fused_vmem_floats(num_src: int, num_dst: int, F: int, *,
                       be: int = DEFAULT_BE, bn: int = DEFAULT_BN,
                       bf: int | None = None) -> int:
@@ -605,3 +754,28 @@ def hbm_bytes_fused_kernel(E: int, F: int, num_dst: int, num_src: int, *,
                 + f_tiles * Ep * 8 + Ep * itemsize)     # ids + dcoef out
     bwd = one_fused(Gp, Np_b) + edge_dot
     return {"fwd": fwd, "bwd": bwd, "total": fwd + bwd}
+
+
+def hbm_bytes_fused_q_kernel(E: int, F: int, num_dst: int, num_src: int, *,
+                             be: int = DEFAULT_BE, bn: int = DEFAULT_BN,
+                             bf: int | None = None) -> dict:
+    """Modeled HBM traffic of :func:`gather_scale_segment_sum_q_pallas`
+    (forward-only).  The source slab crosses HBM at 1 byte/element plus
+    8 bytes/row of metadata instead of 4 bytes/element — AND the
+    decode round-trip of the wire path (read q, write fp32 rows, re-read
+    them in the kernel) disappears entirely."""
+    bf = _pick_bf(F) if bf is None else bf
+    Fp = _tiles(F, bf) * bf
+    Ep = _pad_edges(E, be)
+    Np = _tiles(num_dst + 1, bn) * bn
+    Sp = _tiles(num_src, SUBLANE) * SUBLANE
+    f_tiles = Fp // bf
+    fwd = (Sp * Fp * 1                              # int8 slab once
+           + f_tiles * Sp * META_COLS * 4           # metadata per f tile
+           + f_tiles * (Np // bn) * Ep * 12         # src+dst+coef
+           + Np * Fp * 4)                           # write fp32 out
+    # what the decode-then-fp32 path would have paid on top of the
+    # fp32 fused kernel: read q + meta, write the fp32 feature matrix
+    decode_roundtrip = num_src * F * 1 + num_src * 8 + num_src * F * 4
+    return {"fwd": fwd, "total": fwd,
+            "decode_roundtrip_avoided": decode_roundtrip}

@@ -58,6 +58,13 @@ def parse_args(argv=None):
                          "and cache-fill payloads; fp32 is bit-exact")
     ap.add_argument("--use-kernel", action="store_true",
                     help="Pallas segment-sum for the Gather step")
+    ap.add_argument("--reorder", default="none",
+                    choices=["none", "degree", "bfs", "rcm"],
+                    help="locality-reorder the served graph (survey "
+                         "§3.2.4); the sampler and caches operate on "
+                         "the packed graph while request node ids map "
+                         "in through the inverse permutation and "
+                         "responses are reported in original ids")
     ap.add_argument("--replicas", type=int, default=1,
                     help="initial replica count; > 1 (or --autoscale) "
                          "serves through the elastic ReplicaRouter")
@@ -148,6 +155,22 @@ def run(args):
     print(f"graph: {g.num_nodes} nodes, {g.num_edges} edges, "
           f"{g.num_classes} classes")
 
+    perm = inv = None
+    if args.reorder != "none":
+        # the serving stack (sampler, halo, feature + embedding caches)
+        # operates entirely on the packed graph; external node ids cross
+        # the API boundary through inv (in) and perm (out)
+        from repro.core.reordering import locality_report
+        from repro.kernels import ops as kops
+        g, perm, inv = g.reordered(args.reorder)
+        rep = locality_report(g)
+        e = g.edges()
+        td = kops.record_tile_density(e[:, 0], e[:, 1], g.num_nodes)
+        print(f"reorder={args.reorder}: gather stride "
+              f"{rep['avg_gather_stride']:.1f}, reuse hit "
+              f"{rep['reuse_hit_rate']:.2%}, active tiles "
+              f"{td['active_tile_frac']:.2%}")
+
     cfg = GNNConfig(arch=args.arch, feat_dim=feat_dim, hidden=args.hidden,
                     num_classes=g.num_classes,
                     num_layers=len(args.fanouts),
@@ -170,13 +193,28 @@ def run(args):
         print(f"pre-trained {args.train_epochs} epochs, "
               f"loss {float(loss):.4f}")
 
+    # the workload arrives in ORIGINAL node ids (clients know nothing of
+    # the packing); ids map into the packed space here, at the boundary
     workload = poisson_workload(args.requests, np.arange(g.num_nodes),
                                 args.rate, seed=args.seed + 1)
+    if inv is not None:
+        for r in workload:
+            r.node_id = int(inv[r.node_id])
+
+    def to_original_ids(wl):
+        """Report completed responses in the clients' original ids."""
+        if perm is not None:
+            for r in wl:
+                r.node_id = int(perm[r.node_id])
+        return wl
+
     capacity = int(g.num_nodes * args.cache_frac)
 
     if args.replicas > 1 or args.autoscale:
-        return _run_replicated(args, g, cfg, params, workload, capacity,
-                               _update_stream_kw(args))
+        out = _run_replicated(args, g, cfg, params, workload, capacity,
+                              _update_stream_kw(args, inv))
+        to_original_ids(workload)
+        return out
 
     def serve(policy: str) -> dict:
         srv = GNNInferenceServer(
@@ -187,12 +225,14 @@ def run(args):
         srv.warmup()
         # each serve pass folds a fresh copy of the stream into a fresh
         # copy of the graph, so baseline and cached runs stay comparable
-        kw = _update_stream_kw(args)
+        kw = _update_stream_kw(args, inv)
         if kw:
             srv.g = srv.sampler.g = copy.deepcopy(g)
             srv.cache.g = srv.cache.features.g = srv.g
             srv.sampler.apply_delta(np.zeros(0, np.int64))
-        srv.run(copy.deepcopy(workload), **kw)
+        wl = copy.deepcopy(workload)
+        srv.run(wl, **kw)
+        to_original_ids(wl)
         out = srv.summary()
         out["update_seq"] = srv._update_seq
         return out
@@ -224,16 +264,19 @@ def run(args):
     return res
 
 
-def _update_stream_kw(args) -> dict:
+def _update_stream_kw(args, inv=None) -> dict:
     """Build the ``run(update_log=, update_every=, update_chunk=)``
     kwargs for ``--update-stream``: default cadence folds after every
     quarter of the workload, spreading the stream across ~4 chunks so
     mutations actually interleave with traffic (an end-of-run fold would
-    never exercise mid-run invalidation)."""
+    never exercise mid-run invalidation).  ``inv`` relabels an
+    original-id stream into the packed id space under ``--reorder``."""
     if not args.update_stream:
         return {}
     from repro.core.updates import load_update_stream
     log = load_update_stream(args.update_stream)
+    if inv is not None:
+        log = log.relabel(inv)
     every = args.update_every or max(1, args.requests // 4)
     chunk = max(1, -(-log.last_seq // 4))          # ceil(last_seq / 4)
     print(f"update stream: {log.last_seq} events from "

@@ -87,6 +87,16 @@ def parse_args(argv=None):
     ap.add_argument("--cache", default="degree",
                     choices=["none", "degree", "importance", "random"])
     ap.add_argument("--batch", type=int, default=64)
+    ap.add_argument("--reorder", default="none",
+                    choices=["none", "degree", "bfs", "rcm"],
+                    help="locality-reorder the graph before anything "
+                         "else touches it (survey §3.2.4: degree = "
+                         "ZIPPER, bfs = GNNAdvisor/Rabbit-order "
+                         "stand-in, rcm = reverse Cuthill-McKee). "
+                         "Partitioners, samplers, halo layouts and "
+                         "caches all operate on the packed graph; "
+                         "training losses/accuracy are "
+                         "relabeling-invariant")
     ap.add_argument("--use-kernel", action="store_true",
                     help="run every aggregation (the Gather hot spot) "
                          "through the differentiable fused Pallas "
@@ -195,6 +205,23 @@ def run(args):
     print(f"graph: {g.num_nodes} nodes, {g.num_edges} edges, "
           f"{g.num_classes} classes; devices={jax.device_count()}")
 
+    reorder_inv = None
+    if args.reorder != "none":
+        # pack BEFORE partitioning/sampling/halo so every downstream
+        # structure keys off the packed id space; node ids round-trip
+        # through (perm, inv) at the API boundary — training itself is
+        # relabeling-invariant, so perm is only needed for reporting
+        from repro.core.reordering import locality_report
+        from repro.kernels import ops as kops
+        g, perm, reorder_inv = g.reordered(args.reorder)
+        rep = locality_report(g)
+        e = g.edges()
+        td = kops.record_tile_density(e[:, 0], e[:, 1], g.num_nodes)
+        print(f"reorder={args.reorder}: gather stride "
+              f"{rep['avg_gather_stride']:.1f}, reuse hit "
+              f"{rep['reuse_hit_rate']:.2%}, active tiles "
+              f"{td['active_tile_frac']:.2%}")
+
     cfg = GNNConfig(arch=args.arch, feat_dim=feat_dim,
                     hidden=args.hidden, num_classes=g.num_classes,
                     use_kernel=args.use_kernel,
@@ -221,6 +248,11 @@ def run(args):
 
             from repro.core.updates import load_update_stream
             log = load_update_stream(args.update_stream)
+            if reorder_inv is not None:
+                # the stream speaks original ids; the trainer's graph is
+                # packed — relabel once at the boundary (folding
+                # commutes with relabeling)
+                log = log.relabel(reorder_inv)
             per = args.updates_per_epoch or _math.ceil(
                 log.last_seq / max(args.epochs - 1, 1))
             print(f"update stream: {log.last_seq} events from "
@@ -405,7 +437,14 @@ def run(args):
                 # are byte-accounted and arrive wire-decoded (zero rows at
                 # pads — pad slots never aggregate, training is unaffected)
                 src = mb.blocks[0].src_nodes
-                x_in = jnp.asarray(store.fetch_masked(src, src >= 0))
+                if args.wire_codec == "int8" and args.use_kernel:
+                    # int8-in path: rows stay in wire format all the way
+                    # into the aggregation kernel, which dequantizes per
+                    # source slab — no decode round-trip (layers that
+                    # project before aggregating decode on device)
+                    x_in = store.fetch_masked_wire(src, src >= 0)
+                else:
+                    x_in = jnp.asarray(store.fetch_masked(src, src >= 0))
                 y = jnp.asarray(g.labels[seeds])
                 params, ostate, loss = step(params, ostate, blocks, x_in,
                                             y, jnp.ones_like(y, jnp.float32))

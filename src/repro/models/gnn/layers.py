@@ -10,6 +10,7 @@ import numpy as np
 from repro.core.abstraction import (DeviceGraph, MessagePassing,
                                     gather_scale_segment_sum,
                                     segment_softmax, segment_sum)
+from repro.core.comm import QuantizedRows
 
 
 def _dense(key, din, dout):
@@ -29,6 +30,8 @@ class GCNLayer(MessagePassing):
 
     def __call__(self, p, g: DeviceGraph, x_src, x_dst=None, *,
                  use_kernel=False):
+        if isinstance(x_src, QuantizedRows):
+            x_src = jnp.asarray(x_src.dequantize())   # projects first
         if x_dst is None:
             x_dst = x_src[:g.num_dst]
         h = x_src @ p["w"]
@@ -44,7 +47,17 @@ class GCNLayer(MessagePassing):
 
 
 class SAGELayer(MessagePassing):
-    """GraphSAGE-mean: h' = W_self h + W_nbr mean(neighbors)."""
+    """GraphSAGE-mean: h' = W_self h + W_nbr mean(neighbors).
+
+    The neighbor mean routes through the fused
+    gather→scale→segment-sum (mask as the per-edge coefficient, degree
+    normalization after) — same math as the previous ``segment_mean``
+    path, but on the kernel path the (E, F) message tensor stays in
+    VMEM, and because features aggregate *before* any projection,
+    layer 0 can consume :class:`~repro.core.comm.QuantizedRows` int8
+    wire rows directly: the kernel dequantizes per source slab, so the
+    wire fetch never takes a decode round-trip through HBM
+    (``--wire-codec int8 --use-kernel``)."""
 
     aggregate = "mean"
 
@@ -57,6 +70,22 @@ class SAGELayer(MessagePassing):
 
     def update(self, p, agg, self_feat):
         return self_feat @ p["w_self"] + agg @ p["w_nbr"] + p["b"]
+
+    def __call__(self, p, g: DeviceGraph, x_src, x_dst=None, *,
+                 use_kernel=False):
+        if x_dst is None:
+            # the self path needs fp32 rows; only the num_dst prefix
+            # is ever dequantized host-side on the int8-in path
+            x_dst = (jnp.asarray(
+                x_src.rows(slice(0, g.num_dst)).dequantize())
+                if isinstance(x_src, QuantizedRows)
+                else x_src[:g.num_dst])
+        coef = g.edge_mask.astype(jnp.float32)
+        agg = gather_scale_segment_sum(x_src, g.edge_src, g.edge_dst,
+                                       coef, g.num_dst,
+                                       use_kernel=use_kernel)
+        agg = agg / g.in_deg[:, None]
+        return self.update(p, agg, x_dst)
 
 
 class GATLayer(MessagePassing):
@@ -75,6 +104,10 @@ class GATLayer(MessagePassing):
 
     def __call__(self, p, g: DeviceGraph, x_src, x_dst=None, *,
                  use_kernel=False):
+        if isinstance(x_src, QuantizedRows):
+            # attention projects before aggregating, so the int8-in
+            # kernel path does not apply — decode up front
+            x_src = jnp.asarray(x_src.dequantize())
         if x_dst is None:
             x_dst = x_src[:g.num_dst]
         heads, hd = p["a_src"].shape
@@ -82,6 +115,14 @@ class GATLayer(MessagePassing):
         hdst = (x_dst @ p["w"]).reshape(-1, heads, hd)
         es = jnp.einsum("nhd,hd->nh", hs, p["a_src"])
         ed = jnp.einsum("nhd,hd->nh", hdst, p["a_dst"])
+        if use_kernel:
+            # one-pass fused online-softmax kernel: edge logits and
+            # alphas never reach HBM (falls back to the multi-pass
+            # kernel path when the VMEM capacity predicate says no)
+            from repro.kernels import ops as kops
+            return kops.gat_attention(
+                hs.reshape(-1, heads * hd), es, ed, g.edge_src,
+                g.edge_dst, g.edge_mask, g.num_dst, heads=heads)
         logits = jax.nn.leaky_relu(
             jnp.take(es, g.edge_src, axis=0)
             + jnp.take(ed, g.edge_dst, axis=0), 0.2)        # (E, heads)
@@ -130,6 +171,8 @@ class GGNNLayer(MessagePassing):
                 "b": jnp.zeros((3 * dout,), jnp.float32)}
 
     def __call__(self, p, g, x_src, x_dst=None, *, use_kernel=False):
+        if isinstance(x_src, QuantizedRows):
+            x_src = jnp.asarray(x_src.dequantize())   # projects first
         if p.get("proj") is not None:
             x_src = x_src @ p["proj"]
         if x_dst is None:

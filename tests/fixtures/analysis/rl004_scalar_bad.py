@@ -1,0 +1,25 @@
+"""RL004 scalar-accumulator idiom — the shapes that do NOT qualify.
+
+The codified exception is narrow: a 2-D ``pltpu.VMEM`` scratch
+``(rows, 1)`` with sublane-aligned rows.  Everything adjacent to it
+stays flagged: misaligned rows, a 3-D scratch with a trailing 1, and a
+``pl.BlockSpec`` shaped around a scalar column (an HBM block, not a
+VMEM accumulator).
+"""
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+VMEM_BUDGET = 8 * 2**20
+
+
+def scratch():
+    ragged = pltpu.VMEM((12, 1), jnp.float32)    # BAD: rows not 8-aligned
+    deep = pltpu.VMEM((1, 8, 1), jnp.float32)    # BAD: 3-D, not the idiom
+    return ragged, deep
+
+
+def spec():
+    # BAD: BlockSpec last-dim-1 is never exempt — a scalar column in HBM
+    # should ride along a wider block, not get its own lane tile
+    return pl.BlockSpec((8, 1), lambda i: (i, 0))

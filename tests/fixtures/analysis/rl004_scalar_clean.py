@@ -1,0 +1,18 @@
+"""RL004 scalar-accumulator idiom — the codified clean shapes.
+
+A 2-D ``pltpu.VMEM`` scratch ``(rows, 1)`` with sublane-aligned rows is
+the online-softmax running max/denominator pattern
+(``kernels/flash_attention.py``, ``kernels/gat_fused.py``): one scalar
+per row is inherent to the algorithm, and the rule accepts it without a
+suppression comment.
+"""
+import jax.numpy as jnp
+from jax.experimental.pallas import tpu as pltpu
+
+VMEM_BUDGET = 8 * 2**20
+
+
+def scratch(bq=128):
+    running_max = pltpu.VMEM((64, 1), jnp.float32)     # 8-aligned rows
+    running_den = pltpu.VMEM((bq, 1), jnp.float32)     # via param default
+    return running_max, running_den

@@ -46,6 +46,7 @@ def rule_ids(result):
     ("RL002", "rl002_bad.py", "rl002_clean.py", 4),
     ("RL003", "rl003_bad.py", "rl003_clean.py", 2),
     ("RL004", "rl004_bad.py", "rl004_clean.py", 4),
+    ("RL004", "rl004_scalar_bad.py", "rl004_scalar_clean.py", 3),
     ("RL006", "rl006_bad.py", "rl006_clean.py", 2),
 ])
 def test_rule_fires_on_bad_and_passes_clean(rule_id, bad, clean, min_hits):
@@ -73,6 +74,16 @@ def test_rl004_flags_each_shape_class():
     assert "not 8-sublane aligned" in msgs
     assert "last dim is 1" in msgs
     assert "exceeds" in msgs and "budget" in msgs
+
+
+def test_rl004_scalar_accumulator_idiom_is_narrow():
+    """The (rows, 1) VMEM exemption must not leak: BlockSpec last-dim-1,
+    misaligned rows, and 3-D scratches all still fire."""
+    res = lint_fixture("rl004_scalar_bad.py", select=["RL004"])
+    col_hits = [f for f in res.findings if "last dim is 1" in f.message]
+    assert len(col_hits) >= 2, res.format_human()
+    assert any(f.message.startswith("BlockSpec") for f in col_hits)
+    assert any("not 8-sublane aligned" in f.message for f in res.findings)
 
 
 def _run_rl005(tree):
@@ -190,8 +201,10 @@ def test_real_tree_is_clean():
     assert proc.returncode == 0, proc.stdout + proc.stderr
     report = json.loads(proc.stdout)
     assert report["findings"] == []
-    # the deliberate exceptions are visible, not invisible
-    assert len(report["suppressed"]) >= 4
+    # the deliberate exceptions are visible, not invisible (the RL004
+    # scalar-accumulator scratches are codified in the rule now, so only
+    # the RL001 replicated-loss exceptions remain suppressed)
+    assert len(report["suppressed"]) >= 2
 
 
 def test_rl001_mutation_catches_pr2_double_psum(tmp_path):

@@ -415,6 +415,47 @@ def test_serving_delta_equals_rebuild_inprocess(log_g):
 
 
 # ---------------------------------------------------------------------------
+# fold-then-reorder: relabeling commutes with folding (the --reorder +
+# --update-stream launcher path relabels the stream ONCE via
+# GraphUpdateLog.relabel instead of re-sorting the graph per fold)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("policy", ["degree", "bfs", "rcm"])
+def test_fold_commutes_with_relabeling(log_g, policy):
+    from repro.core.reordering import apply_order, reorder_graph
+
+    g, log = log_g
+    packed, perm, inv = reorder_graph(g, policy)
+
+    a = apply_order(log.apply(g), perm)          # fold, then reorder
+    b = log.relabel(inv).apply(packed)           # reorder, then fold
+
+    def canon(gr):
+        e = gr.edges()
+        return e[np.lexsort((e[:, 1], e[:, 0]))]
+
+    np.testing.assert_array_equal(canon(a), canon(b))
+    np.testing.assert_array_equal(a.out_degree(), b.out_degree())
+    np.testing.assert_array_equal(a.features, b.features)
+    np.testing.assert_array_equal(a.labels, b.labels)
+
+
+def test_relabel_preserves_log_metadata(log_g):
+    g, log = log_g
+    n = g.num_nodes
+    inv = np.arange(n)[::-1].copy()              # any permutation works
+    r = log.relabel(inv)
+    assert r.last_seq == log.last_seq
+    assert r.counts == log.counts
+    assert r.clock is log.clock                  # shared staleness epochs
+    for ev, rev in zip(log.events, r.events):
+        assert (rev.seq, rev.kind, rev.clock) == (ev.seq, ev.kind,
+                                                  ev.clock)
+        assert rev.u == inv[ev.u]
+        assert rev.v == (inv[ev.v] if ev.v >= 0 else -1)
+
+
+# ---------------------------------------------------------------------------
 # the multi-device delta-vs-rebuild matrix (subprocess; tier dynamic)
 # ---------------------------------------------------------------------------
 

@@ -1,0 +1,151 @@
+"""Locality reordering (survey §3.2.4): policy determinism, the RCM
+bandwidth guarantee on a known graph, hand-checkable locality metrics,
+the perm/inv id round-trip behind the launchers' ``--reorder`` flag, and
+relabeling-invariance of the aggregation the reorder exists to speed up.
+"""
+import numpy as np
+import pytest
+
+from repro.core import reordering as RO
+from repro.graph import generators as G
+from repro.graph.structure import from_edges
+
+
+@pytest.fixture(scope="module")
+def graph(graph):
+    return graph("sbm", 200)
+
+
+def _path_graph(n=8, shuffle_seed=3):
+    """A path 0-1-...-n-1 with scrambled labels: RCM must recover a
+    bandwidth-1 ordering regardless of the labeling."""
+    rng = np.random.default_rng(shuffle_seed)
+    relabel = rng.permutation(n)
+    e = np.stack([relabel[np.arange(n - 1)], relabel[np.arange(1, n)]], 1)
+    return from_edges(n, np.concatenate([e, e[:, [1, 0]]], 0))
+
+
+# ---------------------------------------------------------------------------
+# policies: determinism + permutation validity
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("policy", sorted(RO.REORDER_POLICIES))
+def test_policy_is_deterministic_permutation(graph, policy):
+    p1 = RO.REORDER_POLICIES[policy](graph)
+    p2 = RO.REORDER_POLICIES[policy](graph)
+    np.testing.assert_array_equal(p1, p2)          # ties break stably
+    assert sorted(p1.tolist()) == list(range(graph.num_nodes))
+
+
+def test_bfs_deque_visits_levels_in_csr_order():
+    """Known graph, known traversal: root = max degree, neighbors
+    enqueue in ascending-id (CSR) order, FIFO frontier."""
+    #   1 - 0 - 2,  0 - 3,  2 - 4   (0 has degree 3 -> root)
+    e = np.array([[0, 1], [0, 2], [0, 3], [2, 4]])
+    g = from_edges(5, np.concatenate([e, e[:, [1, 0]]], 0))
+    perm = RO.bfs_locality_order(g)
+    assert perm.tolist() == [0, 1, 2, 3, 4]
+
+
+def test_degree_ties_break_by_ascending_id():
+    """All degrees equal (a cycle) -> degree sort degenerates to the
+    identity, not an arbitrary shuffle."""
+    n = 10
+    e = np.stack([np.arange(n), (np.arange(n) + 1) % n], 1)
+    g = from_edges(n, np.concatenate([e, e[:, [1, 0]]], 0))
+    assert RO.degree_sort_order(g).tolist() == list(range(n))
+
+
+def test_rcm_recovers_path_bandwidth():
+    g = _path_graph(16)
+    e0 = g.edges()
+    assert np.abs(e0[:, 0] - e0[:, 1]).max() > 1   # scrambled
+    packed, perm, inv = RO.reorder_graph(g, "rcm")
+    e = packed.edges()
+    assert np.abs(e[:, 0] - e[:, 1]).max() == 1    # bandwidth-1 band
+
+
+def test_reorder_graph_rejects_unknown_policy(graph):
+    with pytest.raises(KeyError, match="unknown reorder policy"):
+        RO.reorder_graph(graph, "hilbert")
+
+
+# ---------------------------------------------------------------------------
+# perm/inv round-trip (the launcher id contract)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("policy", ["none", "degree", "bfs", "rcm"])
+def test_perm_inv_round_trip(graph, policy):
+    packed, perm, inv = graph.reordered(policy)
+    n = graph.num_nodes
+    np.testing.assert_array_equal(perm[inv], np.arange(n))
+    np.testing.assert_array_equal(inv[perm], np.arange(n))
+    if policy == "none":
+        assert packed is graph                     # no-copy fast path
+    # features/labels moved with their nodes: packed new_id row is the
+    # original perm[new_id] row
+    np.testing.assert_array_equal(packed.features, graph.features[perm])
+    np.testing.assert_array_equal(packed.labels, graph.labels[perm])
+    assert sorted(packed.out_degree().tolist()) == \
+        sorted(graph.out_degree().tolist())
+
+
+@pytest.mark.parametrize("policy", ["degree", "bfs", "rcm"])
+def test_aggregation_commutes_with_relabeling(graph, policy):
+    """sum over in-neighbors on the packed graph == the original
+    aggregation read back through perm — the invariant that makes
+    --reorder transparent to training."""
+    packed, perm, inv = graph.reordered(policy)
+
+    def agg(g):
+        e = g.edges()
+        out = np.zeros((g.num_nodes, g.features.shape[1]), np.float64)
+        np.add.at(out, e[:, 1], g.features[e[:, 0]])
+        return out
+
+    np.testing.assert_allclose(agg(packed), agg(graph)[perm], rtol=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# locality metrics on hand-checkable graphs
+# ---------------------------------------------------------------------------
+
+def test_locality_metrics_on_known_chain():
+    # directed chain 0->1->2->3: strides of exactly 1 on both streams,
+    # every edge inside a 2-wide band, no dst is ever revisited
+    g = from_edges(4, np.array([[0, 1], [1, 2], [2, 3]]))
+    assert RO.edge_locality(g, window=2) == 1.0
+    assert RO.avg_gather_stride(g) == 1.0
+    assert RO.reuse_distance_hit_rate(g) == 0.0
+
+    # fan-in: every edge hits dst 0 -> all but the first access reuse it
+    g2 = from_edges(4, np.array([[1, 0], [2, 0], [3, 0]]))
+    assert RO.reuse_distance_hit_rate(g2) == pytest.approx(2 / 3)
+
+
+def test_locality_metrics_empty_graph():
+    g = from_edges(5, np.zeros((0, 2), np.int64))
+    rep = RO.locality_report(g)
+    assert rep == {"edge_locality": 0.0, "avg_gather_stride": 0.0,
+                   "reuse_hit_rate": 0.0}
+
+
+def test_reordering_improves_tile_density(graph):
+    """RCM's banded edges activate fewer (dst-tile, edge-tile) grid
+    cells than the raw labeling — the VMEM-residency metric the blocked
+    kernels' wall-clock follows."""
+    from repro.kernels.segment_sum import edge_tile_density
+    packed, perm, inv = graph.reordered("rcm")
+    e0, e1 = graph.edges(), packed.edges()
+    d0 = edge_tile_density(e0[:, 0], e0[:, 1], graph.num_nodes,
+                           be=32, bn=32)
+    d1 = edge_tile_density(e1[:, 0], e1[:, 1], packed.num_nodes,
+                           be=32, bn=32)
+    assert 0.0 < d1["active_tile_frac"] <= d0["active_tile_frac"] <= 1.0
+
+
+def test_tile_density_no_edges():
+    from repro.kernels.segment_sum import edge_tile_density
+    z = np.zeros(0, np.int64)
+    d = edge_tile_density(z, z, 10)
+    assert d == {"active_tile_frac": 0.0, "src_rows_per_edge_tile": 0.0}
